@@ -1,0 +1,20 @@
+"""Paper Fig. 5: PLS alone beats static; PLS + loss-aware prioritization
+(full DPQuant) is best."""
+from __future__ import annotations
+
+from benchmarks.common import cnn_model, emit, make_run, quick_train
+
+
+def main(epochs=3):
+    model = cnn_model()
+    for frac in (0.6, 0.9):
+        for mode in ("static", "pls", "dpquant"):
+            run = make_run(model, dp=True, quant_fraction=frac, seed=11)
+            tr = quick_train(run, epochs, mode=mode)
+            emit("fig5_ablation", frac=frac, mode=mode,
+                 accuracy=f"{tr.history[-1].accuracy:.4f}",
+                 loss=f"{tr.history[-1].loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

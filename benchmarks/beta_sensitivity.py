@@ -1,0 +1,20 @@
+"""Paper Table 9 / A.7: temperature beta sweep — moderate-to-high beta
+(loss-aware but still stochastic) beats beta -> 0 (pure random)."""
+from __future__ import annotations
+
+from benchmarks.common import cnn_model, emit, make_run, quick_train
+
+
+def main(epochs=3):
+    model = cnn_model()
+    for beta in (0.1, 1.0, 10.0, 50.0):
+        run = make_run(model, dp=True, quant_fraction=0.6, beta=beta,
+                       seed=5, analysis_interval=1)
+        tr = quick_train(run, epochs, mode="dpquant")
+        emit("table9_beta", beta=beta,
+             accuracy=f"{tr.history[-1].accuracy:.4f}",
+             loss=f"{tr.history[-1].loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

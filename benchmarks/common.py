@@ -1,0 +1,60 @@
+"""Shared benchmark harness utilities.
+
+Every benchmark reproduces one paper table/figure at CPU scale (reduced
+models, synthetic data — see DESIGN.md §6) and prints ``name,value,...``
+CSV rows so runs are diffable.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.config import (DPConfig, ModelConfig, OptimConfig, QuantConfig,
+                          RunConfig)
+from repro.data.synthetic import ImageClassDataset
+from repro.train_loop import Trainer
+
+_CSV_HEADER_PRINTED = set()
+
+
+def emit(table: str, **kv):
+    if table not in _CSV_HEADER_PRINTED:
+        print(f"# {table}: " + ",".join(kv.keys()))
+        _CSV_HEADER_PRINTED.add(table)
+    print(table + "," + ",".join(str(v) for v in kv.values()))
+    sys.stdout.flush()
+
+
+def cnn_model(blocks=(1, 1), classes=8, size=16):
+    return ModelConfig(name="bench-cnn", family="resnet",
+                       resnet_blocks=blocks, num_classes=classes,
+                       image_size=size, compute_dtype="float32")
+
+
+def make_run(model=None, *, fmt="luq_fp4", dp=True, sigma=1.0,
+             quant_fraction=0.6, steps_per_epoch=4, batch=32, seed=0,
+             optimizer="sgd", lr=0.5, analysis_interval=2, beta=10.0,
+             ema_alpha=0.3, analysis_noise=0.5):
+    model = model or cnn_model()
+    return RunConfig(
+        model=model, quant=QuantConfig(fmt=fmt),
+        dp=DPConfig(enabled=dp, clip_norm=1.0, noise_multiplier=sigma,
+                    microbatch_size=batch, quant_fraction=quant_fraction,
+                    analysis_interval=analysis_interval, analysis_reps=1,
+                    beta=beta, ema_alpha=ema_alpha,
+                    analysis_noise=analysis_noise),
+        optim=OptimConfig(name=optimizer, lr=lr),
+        global_batch=batch, steps_per_epoch=steps_per_epoch,
+        steps=1000, seed=seed)
+
+
+def quick_train(run, epochs, mode, train_ds=None, eval_ds=None):
+    train_ds = train_ds or ImageClassDataset(
+        n=512, num_classes=run.model.num_classes,
+        image_size=run.model.image_size, noise=0.4, seed=run.seed)
+    eval_ds = eval_ds or ImageClassDataset(
+        n=192, num_classes=run.model.num_classes,
+        image_size=run.model.image_size, noise=0.4, seed=run.seed + 1000)
+    tr = Trainer(run, train_ds, eval_dataset=eval_ds, mode=mode)
+    tr.train(epochs)
+    return tr

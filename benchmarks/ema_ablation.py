@@ -1,0 +1,20 @@
+"""Paper Table 10 / A.8: EMA smoothing of the noisy sensitivity estimates
+stabilizes the ranking vs using the latest (noisy) measurement alone."""
+from __future__ import annotations
+
+from benchmarks.common import cnn_model, emit, make_run, quick_train
+
+
+def main(epochs=3):
+    model = cnn_model()
+    for alpha, label in ((0.3, "with_ema"), (1.0, "without_ema")):
+        run = make_run(model, dp=True, quant_fraction=0.6, ema_alpha=alpha,
+                       analysis_interval=1, seed=13)
+        tr = quick_train(run, epochs, mode="dpquant")
+        emit("table10_ema", variant=label, ema_alpha=alpha,
+             accuracy=f"{tr.history[-1].accuracy:.4f}",
+             loss=f"{tr.history[-1].loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

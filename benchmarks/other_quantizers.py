@@ -1,0 +1,21 @@
+"""Paper Tables 11-12 / A.9: FP8 shows little DP degradation (scheduling
+matters less); uniform INT4 is harsher than LUQ-FP4."""
+from __future__ import annotations
+
+from benchmarks.common import cnn_model, emit, make_run, quick_train
+
+
+def main(epochs=3):
+    model = cnn_model()
+    for fmt in ("none", "fp8_e5m2", "luq_fp4", "int4"):
+        for mode in ("static", "dpquant"):
+            run = make_run(model, dp=True, quant_fraction=0.9, fmt=fmt,
+                           seed=21)
+            tr = quick_train(run, epochs, mode=mode)
+            emit("table11_12_quantizers", fmt=fmt, mode=mode,
+                 accuracy=f"{tr.history[-1].accuracy:.4f}",
+                 loss=f"{tr.history[-1].loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Fig. 1a / Table 8: accuracy degradation from FP4 quantization is
+far worse under DP-SGD than under plain SGD, and grows with the number of
+quantized layers."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cnn_model, emit, make_run, quick_train
+
+
+def main(epochs=3):
+    model = cnn_model()
+    n_layers = model.policy_len()
+    for dp in (False, True):
+        for frac in (0.0, 0.5, 1.0):
+            t0 = time.time()
+            run = make_run(model, dp=dp, quant_fraction=frac,
+                           fmt="luq_fp4" if frac > 0 else "none",
+                           lr=0.5 if dp else 0.05)
+            tr = quick_train(run, epochs, mode="static")
+            acc = tr.history[-1].accuracy
+            emit("fig1a_degradation",
+                 dp=dp, frac_quantized=frac,
+                 accuracy=f"{acc:.4f}",
+                 loss=f"{tr.history[-1].loss:.4f}",
+                 us_per_call=f"{(time.time()-t0)*1e6/epochs:.0f}")
+
+
+if __name__ == "__main__":
+    main()

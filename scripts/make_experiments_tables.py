@@ -1,0 +1,134 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/*.json (run after the sweep + hillclimb complete)."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+HW = "197 TFLOP/s bf16 | 819 GB/s HBM | 50 GB/s/link ICI"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load(results_dir):
+    import sys as _sys
+    _sys.path.insert(0, "src")
+    recs = []
+    for p in sorted(Path(results_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        r["_file"] = p.stem
+        if r.get("status") == "ok":
+            _recompute_ratio(r)
+        recs.append(r)
+    return recs
+
+
+def _recompute_ratio(r):
+    """Re-derive useful_ratio with the attention-aware MODEL_FLOPS (some
+    cells were recorded before the attention term was added)."""
+    try:
+        import jax
+        from repro.configs import get_config
+        from repro.launch import roofline as rl
+        from repro.models.registry import build_model
+        from repro.config import QuantConfig, SHAPES
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        model = build_model(cfg, QuantConfig())
+        ap = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        mf = rl.model_flops(cfg, ap, shape.kind, shape.global_batch,
+                            shape.seq_len, r["n_devices"])
+        r["roofline"]["model_flops_per_device"] = mf
+        r["roofline"]["useful_ratio"] = (
+            mf / r["roofline"]["flops"] if r["roofline"]["flops"] else None)
+    except Exception:
+        pass
+
+
+def dryrun_table(recs):
+    lines = ["| cell | mesh | status | args/dev | temp/dev | compile s | HLO flops/dev | coll bytes/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("tag"):
+            continue
+        cell = f"{r['arch']} × {r['shape']}"
+        if r["status"] == "skipped":
+            lines.append(f"| {cell} | {r['mesh']} | SKIP(full-attn) | - | - | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {cell} | {r['mesh']} | ERROR | - | - | - | - | - |")
+            continue
+        m = r["memory"]
+        rf = r["roofline"]
+        lines.append(
+            f"| {cell} | {r['mesh']} | ok | {fmt_bytes(m['argument_size_in_bytes'])} "
+            f"| {fmt_bytes(m['temp_size_in_bytes'])} | {r.get('compile_s','')} "
+            f"| {rf['flops']:.2e} | {fmt_bytes(rf['collective_bytes'])} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = ["| cell | mesh | compute s | memory s | collective s | dominant | useful ratio |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("tag") or r["status"] != "ok":
+            continue
+        if r["mesh"] != "16x16":
+            continue          # roofline table is single-pod per assignment
+        rf = r["roofline"]
+        ratio = f"{rf['useful_ratio']:.3f}" if rf.get("useful_ratio") else "-"
+        lines.append(
+            f"| {r['arch']} × {r['shape']} | {r['mesh']} | {rf['compute_s']:.3e} "
+            f"| {rf['memory_s']:.3e} | {rf['collective_s']:.3e} "
+            f"| **{rf['dominant']}** | {ratio} |")
+    return "\n".join(lines)
+
+
+def perf_table(recs):
+    by_key = {}
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        key = (r["arch"], r["shape"])
+        by_key.setdefault(key, {})[r.get("tag") or "baseline"] = r
+    lines = []
+    for (arch, shape), variants in sorted(by_key.items()):
+        if len(variants) < 2:
+            continue
+        lines.append(f"\n#### {arch} × {shape}\n")
+        lines.append("| variant | compute s | memory s | collective s | dominant | Δdominant vs baseline |")
+        lines.append("|---|---|---|---|---|---|")
+        base = variants.get("baseline")
+        bdom = base["roofline"]["dominant"] if base else None
+        bval = base["roofline"][f"{bdom}_s"] if base else None
+        order = ["baseline"] + sorted(v for v in variants if v != "baseline")
+        for tag in order:
+            r = variants[tag]
+            rf = r["roofline"]
+            delta = ""
+            if base and bval:
+                delta = f"{(1 - rf[f'{bdom}_s'] / bval) * 100:+.1f}%"
+            lines.append(
+                f"| {tag} | {rf['compute_s']:.3e} | {rf['memory_s']:.3e} "
+                f"| {rf['collective_s']:.3e} | {rf['dominant']} | {delta} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    results = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(results)
+    print("## Dry-run table\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline table (single-pod)\n")
+    print(roofline_table(recs))
+    print("\n## Perf variants\n")
+    print(perf_table(recs))

@@ -1,0 +1,4 @@
+"""DPQuant-JAX: differentially-private training with dynamic quantization
+scheduling (Gao et al., 2025), as a production JAX framework."""
+
+__version__ = "1.0.0"

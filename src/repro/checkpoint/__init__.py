@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.serialization import restore, save
+
+__all__ = ["CheckpointManager", "save", "restore"]

@@ -1,0 +1,92 @@
+"""CheckpointManager: retention, async writes, latest-valid discovery.
+
+DP-specific requirement: the RDP accountant history and the DPQuant
+scheduler state are part of every checkpoint — a restart that forgot spent
+epsilon would silently break the privacy guarantee, and one that forgot the
+EMA scores would restart the analysis from scratch (paying extra analysis
+budget).  Both are plain dicts and ride in the ``aux`` payload.
+"""
+from __future__ import annotations
+
+import pickle
+import re
+import threading
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+from repro.checkpoint import serialization
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ #
+    def _path(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}.ckpt"
+
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*.ckpt"):
+            m = re.match(r"step_(\d+)\.ckpt", p.name)
+            if m and (p / "meta.json").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree: Any, aux: Optional[dict] = None) -> None:
+        self.wait()
+        # pickle non-jsonable aux bits (e.g. numpy RandomState tuples)
+        aux = aux or {}
+        blob = {"step": step}
+        payload = {"pickled_aux": _pickle_hex(aux), **blob}
+
+        def work():
+            serialization.save(self._path(step), tree, payload)
+            self._gc()
+
+        if self.async_write:
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+        else:
+            work()
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            import shutil
+            shutil.rmtree(self._path(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def restore_latest(self, like: Any, shardings: Any = None
+                       ) -> Optional[Tuple[int, Any, dict]]:
+        """Latest checkpoint that passes CRC; corrupted ones are skipped."""
+        self.wait()
+        for step in reversed(self.steps()):
+            try:
+                tree, aux = serialization.restore(self._path(step), like,
+                                                  shardings)
+                real_aux = _unpickle_hex(aux.get("pickled_aux", ""))
+                return step, tree, real_aux
+            except Exception:  # noqa: BLE001 - corrupted checkpoint
+                continue
+        return None
+
+
+def _pickle_hex(obj) -> str:
+    return pickle.dumps(obj).hex()
+
+
+def _unpickle_hex(s: str):
+    if not s:
+        return {}
+    return pickle.loads(bytes.fromhex(s))

@@ -1,0 +1,97 @@
+"""Pytree <-> on-disk serialization (npz + JSON treedef), CRC-checked.
+
+No orbax offline; this is a self-contained format:
+
+  <dir>/step_<N>.ckpt/
+    arrays.npz        flat arrays keyed by index
+    meta.json         treedef repr, leaf paths, aux state (accountant,
+                      scheduler, data cursor), crc32 of arrays.npz
+
+Writes are atomic: serialize into ``<name>.tmp`` then ``os.replace``.
+Restore validates the CRC and returns (pytree, aux) — corrupted/partial
+checkpoints are skipped by the manager.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [(jax.tree_util.keystr(path), np.asarray(leaf))
+              for path, leaf in flat[0]]
+    return leaves, flat[1]
+
+
+def save(path: str, tree: Any, aux: Optional[dict] = None) -> None:
+    path = Path(path)
+    tmp = path.with_suffix(".tmp")
+    if tmp.exists():
+        import shutil
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"a{i}": arr for i, (_, arr) in enumerate(leaves)}
+    np.savez(tmp / "arrays.npz", **arrays)
+    crc = zlib.crc32((tmp / "arrays.npz").read_bytes())
+    meta = {
+        "paths": [p for p, _ in leaves],
+        "crc32": crc,
+        "aux": aux or {},
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta, default=_json_default))
+    if path.exists():
+        import shutil
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def _json_default(o):
+    if isinstance(o, np.ndarray):
+        return {"__nd__": o.tolist(), "dtype": str(o.dtype)}
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, tuple):
+        return list(o)
+    raise TypeError(f"not jsonable: {type(o)}")
+
+
+def restore(path: str, like: Any, shardings: Any = None
+            ) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings — this is where *elastic resharding* happens: the stored
+    host arrays are placed with the new mesh's shardings via
+    ``jax.device_put`` regardless of the mesh they were saved under."""
+    path = Path(path)
+    meta = json.loads((path / "meta.json").read_text())
+    crc = zlib.crc32((path / "arrays.npz").read_bytes())
+    if crc != meta["crc32"]:
+        raise IOError(f"checkpoint {path} failed CRC validation")
+    arrays = np.load(path / "arrays.npz")
+    leaves = [arrays[f"a{i}"] for i in range(len(meta["paths"]))]
+    treedef = jax.tree_util.tree_structure(like)
+    if treedef.num_leaves != len(leaves):
+        raise IOError(
+            f"checkpoint {path} has {len(leaves)} leaves; expected "
+            f"{treedef.num_leaves}")
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda arr, sh: jax.device_put(arr, sh), tree, shardings)
+    else:
+        like_leaves = jax.tree_util.tree_leaves(like)
+        tree = jax.tree_util.tree_unflatten(
+            treedef,
+            [jax.numpy.asarray(l, dtype=ll.dtype)
+             for l, ll in zip(leaves, like_leaves)])
+    return tree, meta.get("aux", {})

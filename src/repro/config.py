@@ -1,0 +1,202 @@
+"""Config system for DPQuant-JAX.
+
+Plain dataclasses (no external deps). Every run is described by a RunConfig:
+model + quantization + DP + parallelism + optimizer + data. Architecture
+configs live in ``repro.configs`` and register themselves in ``ARCH_REGISTRY``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.
+
+    ``family`` selects the model builder:
+      dense_lm | moe_lm | ssm | hybrid | encdec | vlm | resnet | densenet | bert
+    """
+    name: str
+    family: str
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    dense_ff_residual: int = 0          # arctic-style dense residual MLP width
+    moe_impl: str = "dense"             # "dense" (small/smoke) | "capacity" (sharded)
+    moe_capacity_factor: float = 1.25
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_chunk: int = 256
+    d_inner: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    conv_width: int = 4
+    # --- hybrid (RG-LRU / griffin) ---
+    lru_width: int = 0
+    attn_window: int = 2048
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("rec","rec","attn")
+    # --- enc-dec ---
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    # --- vlm ---
+    n_vision_tokens: int = 0
+    # --- cnn / bert ---
+    num_classes: int = 0
+    image_size: int = 32
+    in_channels: int = 3
+    resnet_blocks: Tuple[int, ...] = ()
+    densenet_blocks: Tuple[int, ...] = ()
+    growth_rate: int = 32
+    max_position: int = 512
+    # --- numerics / structure ---
+    mlp_activation: str = "geglu"        # geglu | swiglu | gelu | relu
+    norm: str = "rmsnorm"                # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    rope_theta: float = 10_000.0
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    # attention memory discipline
+    attn_chunk_q: int = 512
+    attn_chunk_k: int = 1024
+    ce_chunk: int = 512                  # chunked cross-entropy sequence chunk
+    remat: bool = True
+    scan_layers: bool = True
+    # sharding-driven padding (see DESIGN.md §5)
+    pad_heads_to: int = 1                # pad n_heads up to a multiple of this
+    pad_vocab_to: int = 128
+    # per-arch partitioner rule overrides: ((logical_name, ((axes...), ...)), ...)
+    sharding_overrides: Tuple = ()
+
+    # ------------------------------------------------------------------ #
+    @property
+    def padded_heads(self) -> int:
+        if self.n_heads == 0:
+            return 0
+        return _round_up(self.n_heads, self.pad_heads_to)
+
+    @property
+    def padded_vocab(self) -> int:
+        if self.vocab_size == 0:
+            return 0
+        return _round_up(self.vocab_size, self.pad_vocab_to)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return self.family in ("dense_lm", "moe_lm", "ssm", "hybrid", "encdec", "vlm")
+
+    def policy_len(self) -> int:
+        """Number of schedulable layers for DPQuant."""
+        if self.family == "encdec":
+            return self.n_enc_layers + self.n_dec_layers
+        if self.family == "resnet":
+            return sum(self.resnet_blocks) + 1
+        if self.family == "densenet":
+            return sum(self.densenet_blocks) + len(self.densenet_blocks)
+        return self.n_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Low-precision simulation config (paper §6 'Low Precision Format')."""
+    fmt: str = "luq_fp4"    # luq_fp4 | int4 | fp8_e4m3 | fp8_e5m2 | bf16 | none
+    quantize_fwd: bool = True
+    quantize_dgrad: bool = True   # paper A.12: quantize inputs of dgrad GEMM
+    quantize_wgrad: bool = True   # ... and of wgrad GEMM
+    stochastic: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    enabled: bool = True
+    clip_norm: float = 1.0
+    noise_multiplier: float = 1.0
+    delta: float = 1e-5
+    microbatch_size: int = 1
+    # "data_parallel": each scan step vmaps microbatch_size examples per
+    # data shard (mb = microbatch_size * dp_degree).  "single": mb = 1, the
+    # whole mesh model-parallels one example at a time (giant MoE models
+    # whose per-example gradient is itself device-memory-scale).
+    microbatch_mode: str = "data_parallel"
+    grad_accum_dtype: str = "float32"    # bfloat16 for 1T-scale models
+    # DPQuant analysis (paper Table 3 defaults)
+    analysis_interval: int = 2       # epochs between COMPUTELOSSIMPACT runs
+    analysis_reps: int = 2           # R
+    analysis_batch_size: int = 32    # n_sample (paper Table 3: small probe
+                                     # batches -> negligible analysis q)
+    analysis_clip: float = 0.01     # C_measure
+    analysis_noise: float = 0.5     # sigma_measure
+    ema_alpha: float = 0.3           # EMA decay for policy scores
+    beta: float = 10.0               # softmax temperature (Table 9 sweet spot)
+    quant_fraction: float = 0.9      # fraction of layers quantized ("compute budget")
+    compress_cross_pod: bool = False  # int8-compressed cross-pod grad reduce
+    partial_accum: bool = False      # one grad all-reduce per step instead of
+                                     # one per microbatch (perf variant)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    name: str = "sgd"                # sgd | momentum | adam | adamw
+    lr: float = 0.5                  # paper Table 5 uses 0.5 for DP-SGD
+    momentum: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    warmup_steps: int = 0
+    schedule: str = "constant"       # constant | cosine | linear
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    # axis sizes follow the production mesh in launch/mesh.py
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input-shape cells."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    quant: QuantConfig = QuantConfig()
+    dp: DPConfig = DPConfig()
+    optim: OptimConfig = OptimConfig()
+    mesh: MeshConfig = MeshConfig()
+    seed: int = 0
+    global_batch: int = 1024
+    seq_len: int = 1024
+    steps: int = 100
+    steps_per_epoch: int = 10
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 100

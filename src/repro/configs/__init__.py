@@ -1,0 +1,50 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models.
+
+``get_config(arch_id)`` returns the exact full-scale ModelConfig;
+``get_smoke_config(arch_id)`` a reduced same-family config for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+_MODULES = [
+    "gemma_7b", "yi_9b", "yi_6b", "stablelm_3b", "kimi_k2_1t",
+    "arctic_480b", "whisper_medium", "mamba2_130m", "recurrentgemma_9b",
+    "internvl2_1b", "resnet18", "resnet50", "densenet121", "bert_snli",
+]
+
+ASSIGNED_ARCHS: List[str] = [
+    "gemma-7b", "yi-9b", "stablelm-3b", "yi-6b", "kimi-k2-1t-a32b",
+    "arctic-480b", "whisper-medium", "mamba2-130m", "recurrentgemma-9b",
+    "internvl2-1b",
+]
+
+_REGISTRY: Dict[str, dict] = {}
+
+
+def register(arch_id: str, full: ModelConfig, smoke: ModelConfig) -> None:
+    _REGISTRY[arch_id] = {"full": full, "smoke": smoke}
+
+
+def _load():
+    if not _REGISTRY:
+        for m in _MODULES:
+            importlib.import_module(f"repro.configs.{m}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    _load()
+    return _REGISTRY[arch_id]["full"]
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    _load()
+    return _REGISTRY[arch_id]["smoke"]
+
+
+def list_archs() -> List[str]:
+    _load()
+    return sorted(_REGISTRY)

@@ -1,0 +1,61 @@
+"""Quantization policies (paper §5.2).
+
+A *policy* is a set of layers to run quantized.  DPQuant's estimator scores
+candidate policies; Algorithm 2 samples ``m`` of them and quantizes the union
+of their layers.  The default candidate set is one singleton policy per layer
+(so the score of policy i estimates layer i's loss sensitivity R(l_i)); for
+very deep nets layers can be grouped.
+
+Policies materialize as traced ``(n_layers,)`` float {0,1} flag vectors —
+changing the policy never recompiles the step function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """An immutable set of layer indices to quantize."""
+    layers: Tuple[int, ...]
+    n_layers: int
+
+    def flags(self) -> jnp.ndarray:
+        f = np.zeros((self.n_layers,), np.float32)
+        f[list(self.layers)] = 1.0
+        return jnp.asarray(f)
+
+    def __len__(self):
+        return len(self.layers)
+
+
+def full_policy(n_layers: int) -> QuantPolicy:
+    return QuantPolicy(tuple(range(n_layers)), n_layers)
+
+
+def empty_policy(n_layers: int) -> QuantPolicy:
+    return QuantPolicy((), n_layers)
+
+
+def singleton_policies(n_layers: int, group_size: int = 1) -> List[QuantPolicy]:
+    """Candidate policy set P: one policy per layer (or per group)."""
+    out = []
+    for start in range(0, n_layers, group_size):
+        layers = tuple(range(start, min(start + group_size, n_layers)))
+        out.append(QuantPolicy(layers, n_layers))
+    return out
+
+
+def union_policy(policies: Sequence[QuantPolicy], n_layers: int) -> QuantPolicy:
+    layers = sorted({l for p in policies for l in p.layers})
+    return QuantPolicy(tuple(layers), n_layers)
+
+
+def random_policy(n_layers: int, k: int, rng: np.random.RandomState) -> QuantPolicy:
+    """A uniformly random k-subset — the paper's static random baseline."""
+    layers = tuple(sorted(rng.choice(n_layers, size=k, replace=False).tolist()))
+    return QuantPolicy(layers, n_layers)

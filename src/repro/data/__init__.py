@@ -1,0 +1,4 @@
+from repro.data.synthetic import ImageClassDataset, TokenDataset, NLIDataset
+from repro.data.poisson import PoissonSampler
+
+__all__ = ["ImageClassDataset", "TokenDataset", "NLIDataset", "PoissonSampler"]

@@ -1,0 +1,107 @@
+"""Deterministic synthetic data (offline container: no downloads).
+
+Three stream families:
+
+* ``TokenDataset`` — integer token sequences with a planted bigram structure
+  (so a language model has real signal to learn; perplexity decreases).
+* ``ImageClassDataset`` — class-conditional Gaussian prototypes + noise at a
+  configurable image size / #classes (GTSRB-like: 43 classes, CIFAR-like: 10),
+  linearly separable enough that DP-SGD learning curves are informative.
+* ``NLIDataset`` — token-pair classification (SNLI-like 3 classes) for BERT.
+
+All are index-addressable (``get(indices)``) so the Poisson subsampler (the
+DP sampling assumption) can draw arbitrary subsets.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ImageClassDataset:
+    n: int
+    num_classes: int
+    image_size: int = 32
+    channels: int = 3
+    noise: float = 0.6
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        d = self.image_size * self.image_size * self.channels
+        self.prototypes = rng.randn(self.num_classes, d).astype(np.float32)
+        self.labels = rng.randint(0, self.num_classes, size=self.n).astype(np.int32)
+        self._noise_seed = rng.randint(0, 2**31 - 1, size=self.n)
+
+    def get(self, indices: np.ndarray) -> dict:
+        d = self.image_size * self.image_size * self.channels
+        xs = np.empty((len(indices), d), np.float32)
+        ys = self.labels[indices]
+        for i, idx in enumerate(indices):
+            r = np.random.RandomState(self._noise_seed[idx])
+            xs[i] = self.prototypes[ys[i]] + self.noise * r.randn(d)
+        xs = xs.reshape(len(indices), self.image_size, self.image_size,
+                        self.channels)
+        return {"image": jnp.asarray(xs), "label": jnp.asarray(ys)}
+
+
+@dataclasses.dataclass
+class TokenDataset:
+    """Planted-bigram language modelling data."""
+    n: int
+    vocab: int
+    seq_len: int
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        # a sparse deterministic "grammar": every token has 8 likely successors
+        self.successors = rng.randint(0, self.vocab,
+                                      size=(self.vocab, 8)).astype(np.int32)
+        self._seeds = rng.randint(0, 2**31 - 1, size=self.n)
+
+    def get(self, indices: np.ndarray) -> dict:
+        out = np.empty((len(indices), self.seq_len), np.int32)
+        for i, idx in enumerate(indices):
+            r = np.random.RandomState(self._seeds[idx])
+            seq = np.empty(self.seq_len, np.int32)
+            seq[0] = r.randint(self.vocab)
+            for t in range(1, self.seq_len):
+                if r.rand() < 0.9:
+                    seq[t] = self.successors[seq[t - 1], r.randint(8)]
+                else:
+                    seq[t] = r.randint(self.vocab)
+            out[i] = seq
+        return {"tokens": jnp.asarray(out)}
+
+
+@dataclasses.dataclass
+class NLIDataset:
+    n: int
+    vocab: int
+    seq_len: int = 64
+    num_classes: int = 3
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        self.labels = rng.randint(0, self.num_classes, self.n).astype(np.int32)
+        self.class_tokens = rng.randint(0, self.vocab,
+                                        size=(self.num_classes, 16)).astype(np.int32)
+        self._seeds = rng.randint(0, 2**31 - 1, size=self.n)
+
+    def get(self, indices: np.ndarray) -> dict:
+        xs = np.empty((len(indices), self.seq_len), np.int32)
+        ys = self.labels[indices]
+        for i, idx in enumerate(indices):
+            r = np.random.RandomState(self._seeds[idx])
+            seq = r.randint(0, self.vocab, self.seq_len)
+            # plant class-indicative tokens at random positions
+            pos = r.choice(self.seq_len, 8, replace=False)
+            seq[pos] = self.class_tokens[ys[i], r.randint(0, 16, 8)]
+            xs[i] = seq
+        return {"tokens": jnp.asarray(xs), "label": jnp.asarray(ys)}

@@ -1,0 +1,56 @@
+"""DP-SGD / DP-Adam engine: builds the private gradient function.
+
+Combines per-example clipping (repro.dp.clip) + Gaussian noising
+(repro.dp.noise).  The returned function is pure and jit/pjit friendly; the
+privacy *accounting* happens host-side in the training loop (one
+``accountant.step`` per optimizer step), because accounting is exact
+bookkeeping, not computation.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DPConfig
+from repro.dp.clip import per_example_clipped_grad_sum
+from repro.dp.noise import add_gaussian_noise
+
+
+def make_dp_grad_fn(loss_fn: Callable, dp: DPConfig) -> Callable:
+    """Returns ``dp_grad(params, batch, rng) -> (noisy_mean_grad, metrics)``.
+
+    ``loss_fn(params, example, rng)``: scalar loss of a single example.
+    """
+
+    def dp_grad(params, batch, rng):
+        clip_rng, noise_rng = jax.random.split(rng)
+        batch_size = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        grad_sum, metrics = per_example_clipped_grad_sum(
+            loss_fn, params, batch,
+            clip_norm=dp.clip_norm,
+            microbatch_size=dp.microbatch_size,
+            rng=clip_rng)
+        noisy = add_gaussian_noise(
+            grad_sum, clip_norm=dp.clip_norm,
+            noise_multiplier=dp.noise_multiplier,
+            batch_size=batch_size, rng=noise_rng)
+        return noisy, metrics
+
+    return dp_grad
+
+
+def make_nondp_grad_fn(loss_fn: Callable) -> Callable:
+    """Plain (non-private) mean gradient, same signature as make_dp_grad_fn."""
+
+    def mean_loss(params, batch, rng):
+        def one(ex):
+            return loss_fn(params, ex, rng)
+        return jax.vmap(one)(batch).mean()
+
+    def grad_fn(params, batch, rng):
+        loss, grads = jax.value_and_grad(mean_loss)(params, batch, rng)
+        return grads, {"loss": loss}
+
+    return grad_fn

@@ -1,0 +1,33 @@
+"""Gaussian noise injection for DP-SGD.
+
+Abadi et al. (2016) convention (also Opacus'): noise N(0, (sigma*C)^2) is
+added to the *sum* of clipped per-example gradients, then the sum is divided
+by the (expected) batch size:
+
+    g_hat = (sum_i clip_C(g_i) + N(0, sigma^2 C^2 I)) / B
+
+Noise is drawn with ``jax.random.normal`` from a step-derived key: the draw is
+SPMD-consistent across the mesh (same key -> same global tensor regardless of
+sharding), key-derived rather than time-derived so a restarted/elastically
+re-meshed step reproduces bit-identical noise (see DESIGN.md §7).
+
+Per paper A.17, noise is sampled and added in fp32 *before* any quantization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def add_gaussian_noise(grad_sum, *, clip_norm: float, noise_multiplier: float,
+                       batch_size: int, rng: jax.Array):
+    """Noise the clipped-gradient sum and average: returns the DP update."""
+    leaves, treedef = jax.tree_util.tree_flatten(grad_sum)
+    keys = jax.random.split(rng, len(leaves))
+    std = noise_multiplier * clip_norm
+    noisy = [
+        (l.astype(jnp.float32)
+         + std * jax.random.normal(k, l.shape, jnp.float32)) / batch_size
+        for l, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, noisy)

@@ -1,0 +1,3 @@
+from repro.kernels.ops import luq_quantize, luq_matmul, clip_and_sum
+
+__all__ = ["luq_quantize", "luq_matmul", "clip_and_sum"]

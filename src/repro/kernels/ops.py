@@ -1,0 +1,88 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+These own the plumbing the raw kernels don't: uniform-bit generation from a
+PRNG key, per-tensor scale computation, padding to tile multiples, and
+interpret-mode selection (CPU container -> interpret=True; on real TPUs set
+``REPRO_PALLAS_INTERPRET=0`` or pass interpret=False).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.luq_quant import luq_quant_2d
+from repro.kernels.per_sample_clip import per_sample_clip
+from repro.kernels.quant_matmul import quant_matmul
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult0, mult1):
+    m, n = x.shape
+    pm = (-m) % mult0
+    pn = (-n) % mult1
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, (m, n)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def luq_quantize(x: jax.Array, key: jax.Array, block=(256, 256),
+                 interpret=None) -> jax.Array:
+    """LUQ-FP4 stochastic quantization of an arbitrary-shape tensor."""
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = x.shape
+    flat = x.reshape(-1)
+    # view as 2d, lanes-aligned
+    n = flat.shape[0]
+    cols = 256
+    rows = -(-n // cols)
+    flat = jnp.pad(flat, (0, rows * cols - n))
+    x2 = flat.reshape(rows, cols)
+    x2, _ = _pad_to(x2, block[0], block[1])
+    u = jax.random.uniform(key, x2.shape, jnp.float32)
+    alpha = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    q = luq_quant_2d(x2, u, alpha, block=block, interpret=interpret)
+    return q.reshape(-1)[:n].reshape(shape).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def luq_matmul(a: jax.Array, b: jax.Array, key: jax.Array,
+               block=(128, 128, 512), interpret=None) -> jax.Array:
+    """Fused LUQ-quantize-both-operands matmul: (M,K) @ (K,N) -> f32."""
+    interpret = _interpret_default() if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    ka, kb = jax.random.split(key)
+    ap, _ = _pad_to(a, block[0], block[2])
+    bp, _ = _pad_to(b, block[2], block[1])
+    ua = jax.random.uniform(ka, ap.shape, jnp.float32)
+    ub = jax.random.uniform(kb, bp.shape, jnp.float32)
+    alpha_a = jnp.max(jnp.abs(a.astype(jnp.float32)))
+    alpha_b = jnp.max(jnp.abs(b.astype(jnp.float32)))
+    out = quant_matmul(ap, bp, ua, ub, alpha_a, alpha_b, block=block,
+                       interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("clip_norm", "block_d",
+                                             "interpret"))
+def clip_and_sum(grads: jax.Array, clip_norm: float, block_d: int = 512,
+                 interpret=None):
+    """Fused DP per-example clip + batch sum. grads: (B, D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, d = grads.shape
+    pd = (-d) % block_d
+    if pd:
+        grads = jnp.pad(grads, ((0, 0), (0, pd)))
+    out, norms = per_sample_clip(grads, clip_norm, block_d=block_d,
+                                 interpret=interpret)
+    return out[:d], norms

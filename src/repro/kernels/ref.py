@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import LUQ_EXP_LEVELS
+
+
+def luq_quant_ref(x: jax.Array, u: jax.Array, alpha) -> jax.Array:
+    """LUQ-FP4 stochastic quantizer given uniform random bits ``u`` and a
+    precomputed per-tensor scale ``alpha`` (see kernels/luq_quant.py)."""
+    xf = x.astype(jnp.float32)
+    safe_alpha = jnp.where(alpha > 0, alpha, 1.0)
+    sign = jnp.sign(xf)
+    y = jnp.abs(xf) / safe_alpha
+    min_level = 2.0 ** (-(LUQ_EXP_LEVELS - 1))
+    p_under = y / min_level
+    under = jnp.where(u < p_under, min_level, 0.0)
+    ylog = jnp.log2(jnp.maximum(y, min_level))
+    k = jnp.clip(jnp.floor(ylog), -(LUQ_EXP_LEVELS - 1), 0.0)
+    low = jnp.exp2(k)
+    high = jnp.minimum(jnp.exp2(k + 1.0), 1.0)
+    p_up = (y - low) / jnp.maximum(high - low, 1e-30)
+    rounded = jnp.where(u < p_up, high, low)
+    q = jnp.where(y < min_level, under, rounded)
+    out = sign * q * safe_alpha
+    return jnp.where(alpha > 0, out, 0.0).astype(x.dtype)
+
+
+def quant_matmul_ref(a: jax.Array, b: jax.Array, ua: jax.Array,
+                     ub: jax.Array, alpha_a, alpha_b) -> jax.Array:
+    """Fused LUQ-quantize-both-operands matmul oracle (fp32 accumulate)."""
+    aq = luq_quant_ref(a, ua, alpha_a).astype(jnp.float32)
+    bq = luq_quant_ref(b, ub, alpha_b).astype(jnp.float32)
+    return aq @ bq
+
+
+def per_sample_clip_ref(grads: jax.Array, clip_norm: float) -> jax.Array:
+    """Per-row clip: grads (B, D) -> sum_b clip_C(grads[b]).  Also returns
+    per-row norms."""
+    norms = jnp.sqrt(jnp.sum(jnp.square(grads.astype(jnp.float32)), axis=1))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
+    clipped = grads.astype(jnp.float32) * scale[:, None]
+    return clipped.sum(axis=0), norms

@@ -1,0 +1,215 @@
+"""Step builders: jit-ready train / prefill / decode functions + shardings.
+
+``build_train_setup``/``build_serve_setup`` assemble, for a (model, mesh):
+  * the pure step function (DP-SGD/DP-Adam or plain),
+  * in/out NamedShardings derived from logical axes via the partitioner,
+  * abstract (ShapeDtypeStruct) arguments for ``jit(...).lower()`` —
+    the multi-pod dry-run and the roofline derive everything from these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import RunConfig
+from repro.dp.clip import per_example_clipped_grad_sum
+from repro.dp.noise import add_gaussian_noise
+from repro.models.registry import Model
+from repro.optim import make_optimizer, apply_updates
+from repro.optim.optimizers import AdamState
+from repro.parallel import partitioner as pt
+from repro.parallel.axes import partitioning_context
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _opt_axes(opt_name: str, paxes):
+    if opt_name in ("sgd",):
+        return ()
+    if opt_name == "momentum":
+        return paxes
+    return AdamState(paxes, paxes, None)
+
+
+@dataclasses.dataclass
+class TrainSetup:
+    step_fn: Callable
+    in_shardings: Tuple
+    out_shardings: Tuple
+    abstract_args: Tuple
+    mesh: Mesh
+    rules: dict
+    init_fn: Callable           # sharding-annotated param init
+    opt_init_fn: Callable
+
+
+def _microbatch(run: RunConfig, mesh: Mesh) -> int:
+    dp_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_degree = 1
+    for a in dp_axes:
+        dp_degree *= sizes[a]
+    if run.dp.microbatch_mode == "single":
+        return 1
+    mb = run.dp.microbatch_size * dp_degree
+    return max(1, min(mb, run.global_batch))
+
+
+def build_train_setup(model: Model, run: RunConfig, mesh: Mesh,
+                      batch_size: Optional[int] = None,
+                      seq_len: Optional[int] = None) -> TrainSetup:
+    cfg = model.config
+    rules = pt.merge_rules(pt.DEFAULT_RULES, cfg.sharding_overrides)
+    resolver = pt.activation_resolver(mesh, rules)
+    opt = make_optimizer(run.optim)
+    B = batch_size or run.global_batch
+    S = seq_len or run.seq_len
+    mb = _microbatch(run, mesh)
+    n_layers = cfg.policy_len()
+    accum_dtype = jnp.dtype(run.dp.grad_accum_dtype)
+
+    # ---- abstract shapes ----
+    abstract_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    abstract_opt = jax.eval_shape(opt.init, abstract_params)
+    abstract_batch = model.batch_spec(B, S)
+    abstract_args = (
+        abstract_params, abstract_opt, abstract_batch,
+        jax.ShapeDtypeStruct((), jnp.uint32),       # seed
+        jax.ShapeDtypeStruct((n_layers,), jnp.float32),  # qflags
+        jax.ShapeDtypeStruct((), jnp.float32),      # lr
+    )
+
+    # ---- shardings ----
+    paxes = model.param_axes()
+    param_sh = pt.tree_shardings(paxes, abstract_params, mesh, rules)
+    opt_sh = pt.tree_shardings(_opt_axes(opt.name, paxes), abstract_opt,
+                               mesh, rules)
+    batch_sh = pt.tree_shardings(model.batch_axes(), abstract_batch,
+                                 mesh, rules)
+    rep = _replicated(mesh)
+    in_shardings = (param_sh, opt_sh, batch_sh, rep, rep, rep)
+    out_shardings = (param_sh, opt_sh, None)
+
+    def micro_constrain(micro):
+        """Keep the microbatch example-dim data-sharded after the reshape."""
+        def one(x, ax):
+            logical = (None, "batch") + tuple(ax[1:])
+            return jax.lax.with_sharding_constraint(
+                x, pt.named_sharding(logical, x.shape, mesh, rules))
+        return jax.tree_util.tree_map(one, micro, model.batch_axes())
+
+    dp_shards = 1
+    _sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for _a in ("pod", "data"):
+        dp_shards *= _sizes.get(_a, 1)
+    _axes_leaf = lambda x: x is None or (isinstance(x, tuple) and len(x) > 0
+                                         and all(isinstance(e, (str, type(None)))
+                                                 for e in x))
+
+    def partial_constrain(tree):
+        """Partial grad sums: leading shard dim over (pod, data); param dims
+        keep their own sharding."""
+        def one(ax, x):
+            logical = ("batch",) + tuple(ax or [None] * (x.ndim - 1))
+            if len(logical) != x.ndim:
+                return x
+            try:
+                sh = pt.named_sharding(logical, x.shape, mesh, rules)
+            except ValueError:
+                return x
+            return jax.lax.with_sharding_constraint(x, sh)
+        return jax.tree_util.tree_map(one, paxes, tree, is_leaf=_axes_leaf)
+
+    def train_step(params, opt_state, batch, seed, qflags, lr):
+        with partitioning_context(resolver):
+            rng = jax.random.PRNGKey(seed)
+            clip_rng, noise_rng, loss_rng = jax.random.split(rng, 3)
+
+            def loss_one(p, ex, r):
+                b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+                return model.loss_fn(p, b1, r, qflags)
+
+            if run.dp.enabled:
+                grad_sum, metrics = per_example_clipped_grad_sum(
+                    loss_one, params, batch,
+                    clip_norm=run.dp.clip_norm, microbatch_size=mb,
+                    rng=clip_rng, constrain=micro_constrain,
+                    accum_dtype=accum_dtype,
+                    partial_accum_shards=(dp_shards if run.dp.partial_accum
+                                          else 0),
+                    constrain_partial=partial_constrain)
+                grads = add_gaussian_noise(
+                    grad_sum, clip_norm=run.dp.clip_norm,
+                    noise_multiplier=run.dp.noise_multiplier,
+                    batch_size=B, rng=noise_rng)
+            else:
+                def mean_loss(p):
+                    return model.loss_fn(p, batch, loss_rng, qflags)
+                loss, grads = jax.value_and_grad(mean_loss)(params)
+                metrics = {"loss": loss}
+
+            updates, new_opt = opt.update(grads, opt_state, params, lr)
+            new_params = apply_updates(params, updates)
+            return new_params, new_opt, metrics
+
+    def init_fn(key):
+        return model.init(key)
+
+    return TrainSetup(
+        step_fn=train_step, in_shardings=in_shardings,
+        out_shardings=out_shardings, abstract_args=abstract_args,
+        mesh=mesh, rules=rules, init_fn=init_fn, opt_init_fn=opt.init)
+
+
+@dataclasses.dataclass
+class ServeSetup:
+    prefill_fn: Callable
+    decode_fn: Callable
+    prefill_in_shardings: Tuple
+    prefill_abstract: Tuple
+    decode_in_shardings: Tuple
+    decode_abstract: Tuple
+    mesh: Mesh
+    rules: dict
+
+
+def build_serve_setup(model: Model, run: RunConfig, mesh: Mesh,
+                      batch_size: int, seq_len: int) -> ServeSetup:
+    cfg = model.config
+    rules = pt.merge_rules(pt.DEFAULT_RULES, cfg.sharding_overrides)
+    resolver = pt.activation_resolver(mesh, rules)
+
+    abstract_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    param_sh = pt.tree_shardings(model.param_axes(), abstract_params,
+                                 mesh, rules)
+    abstract_batch = model.batch_spec(batch_size, seq_len)
+    batch_sh = pt.tree_shardings(model.batch_axes(), abstract_batch,
+                                 mesh, rules)
+    abstract_cache = model.cache_spec(batch_size, seq_len)
+    cache_sh = pt.tree_shardings(model.cache_axes(), abstract_cache,
+                                 mesh, rules)
+    token_sh = pt.named_sharding(("batch",), (batch_size,), mesh, rules)
+
+    def prefill_fn(params, batch):
+        with partitioning_context(resolver):
+            return model.prefill(params, batch, cache_len=seq_len)
+
+    def decode_fn(params, cache, token):
+        with partitioning_context(resolver):
+            return model.decode_step(params, cache, token)
+
+    return ServeSetup(
+        prefill_fn=prefill_fn, decode_fn=decode_fn,
+        prefill_in_shardings=(param_sh, batch_sh),
+        prefill_abstract=(abstract_params, abstract_batch),
+        decode_in_shardings=(param_sh, cache_sh, token_sh),
+        decode_abstract=(abstract_params, abstract_cache,
+                         jax.ShapeDtypeStruct((batch_size,), jnp.int32)),
+        mesh=mesh, rules=rules)

@@ -1,0 +1,89 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch resnet18 --mode dpquant --epochs 10 --eps 8 \
+        --quant-fraction 0.9 --fmt luq_fp4 --checkpoint-dir ckpt/
+
+Any registered arch id works (use --smoke for the reduced config — the full
+LM configs need the production mesh).  Restores from the latest valid
+checkpoint automatically (fault-tolerant restart).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.config import DPConfig, ModelConfig, OptimConfig, QuantConfig, RunConfig
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.data.synthetic import ImageClassDataset, NLIDataset, TokenDataset
+from repro.train_loop import Trainer
+
+
+def make_dataset(cfg: ModelConfig, n: int, seq_len: int, seed: int = 0):
+    if cfg.family in ("resnet", "densenet"):
+        return ImageClassDataset(n=n, num_classes=cfg.num_classes,
+                                 image_size=cfg.image_size, seed=seed)
+    if cfg.family == "bert":
+        return NLIDataset(n=n, vocab=cfg.vocab_size, seq_len=seq_len,
+                          num_classes=cfg.num_classes, seed=seed)
+    return TokenDataset(n=n, vocab=cfg.vocab_size, seq_len=seq_len, seed=seed)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    ap.add_argument("--mode", default="dpquant",
+                    choices=["dpquant", "pls", "static"])
+    ap.add_argument("--no-dp", action="store_true")
+    ap.add_argument("--fmt", default="luq_fp4")
+    ap.add_argument("--quant-fraction", type=float, default=0.9)
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--steps-per-epoch", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--dataset-size", type=int, default=4096)
+    ap.add_argument("--lr", type=float, default=0.5)
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=["sgd", "momentum", "adam", "adamw"])
+    ap.add_argument("--clip-norm", type=float, default=1.0)
+    ap.add_argument("--noise-multiplier", type=float, default=1.0)
+    ap.add_argument("--eps", type=float, default=None,
+                    help="stop when the privacy budget is reached")
+    ap.add_argument("--microbatch", type=int, default=16)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    run = RunConfig(
+        model=cfg,
+        quant=QuantConfig(fmt=args.fmt),
+        dp=DPConfig(enabled=not args.no_dp, clip_norm=args.clip_norm,
+                    noise_multiplier=args.noise_multiplier,
+                    microbatch_size=args.microbatch,
+                    quant_fraction=args.quant_fraction),
+        optim=OptimConfig(name=args.optimizer, lr=args.lr),
+        global_batch=args.batch, seq_len=args.seq_len,
+        steps_per_epoch=args.steps_per_epoch,
+        steps=args.epochs * args.steps_per_epoch, seed=args.seed)
+
+    ds = make_dataset(cfg, args.dataset_size, args.seq_len, args.seed)
+    ev = make_dataset(cfg, 512, args.seq_len, args.seed + 1) \
+        if cfg.family in ("resnet", "densenet", "bert") else None
+    tr = Trainer(run, ds, eval_dataset=ev, mode=args.mode,
+                 checkpoint_dir=args.checkpoint_dir)
+    resumed = tr.restore_latest()
+    if resumed is not None:
+        print(f"resumed from checkpoint at epoch {resumed}")
+    tr.train(args.epochs, eps_budget=args.eps, verbose=True)
+    if tr.ckpt:
+        tr.ckpt.wait()
+    final = tr.history[-1]
+    print(f"final: loss={final.loss:.4f} eps={final.eps:.3f} "
+          f"acc={final.accuracy}")
+
+
+if __name__ == "__main__":
+    main()

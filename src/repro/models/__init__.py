@@ -1,0 +1,3 @@
+from repro.models.registry import Model, build_model, register_family
+
+__all__ = ["Model", "build_model", "register_family"]

@@ -1,0 +1,116 @@
+"""BERT-style encoder for sequence classification (paper's SNLI experiment).
+
+Pre-LN encoder, learned position embeddings, [CLS] (position 0) pooled
+classification head.  The paper freezes all but the last encoder layer
+(Opacus tutorial recipe); ``bert_trainable_last_only`` reproduces that via
+``stop_gradient`` on the frozen stack — their per-example grads are exactly
+zero and clipping/noise behave identically to Opacus' frozen modules.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.registry import Model, register_family
+
+
+def init_params(key, cfg: ModelConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    blocks = tfm.init_block_stack(ks[0], cfg, cfg.n_layers)
+    # bert mlp is plain gelu: reuse gate as the single projection
+    return {
+        "embed": cm.embed_init(ks[1], (cfg.padded_vocab, cfg.d_model), pdt),
+        "pos_embed": cm.embed_init(ks[2], (cfg.max_position, cfg.d_model), pdt),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), pdt),
+        "cls_w": cm.dense_init(ks[3], (cfg.d_model, cfg.num_classes),
+                               cfg.d_model, jnp.float32),
+        "cls_b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    return {
+        "embed": ("vocab", "embed"),
+        "pos_embed": (None, "embed"),
+        "blocks": dict(tfm.BLOCK_AXES),
+        "final_norm": ("embed",),
+        "cls_w": ("embed", None),
+        "cls_b": (None,),
+    }
+
+
+def bert_block(x, blk, flag, lidx, positions, cfg, quant):
+    """Bidirectional attention + GeLU MLP (pre-LN)."""
+    seed = lidx.astype(jnp.uint32) * jnp.uint32(97)
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = x.dtype
+    h = cm.rmsnorm(x, blk["attn_norm"]).astype(cd)
+    q = qp("bsd,dhk->bshk", h, blk["wq"].astype(cd), seed=seed)
+    k = qp("bsd,dhk->bshk", h, blk["wk"].astype(cd), seed=seed + 1)
+    v = qp("bsd,dhk->bshk", h, blk["wv"].astype(cd), seed=seed + 2)
+    out = cm.chunked_causal_attention(
+        q, k, v, chunk_q=cfg.attn_chunk_q, causal=False,
+        scale=1.0 / math.sqrt(cfg.head_dim))
+    x = x + qp("bshk,hkd->bsd", out, blk["wo"].astype(cd), seed=seed + 3)
+    h2 = cm.rmsnorm(x, blk["mlp_norm"]).astype(cd)
+    a = jax.nn.gelu(qp("bsd,df->bsf", h2, blk["wi_gate"].astype(cd),
+                       seed=seed + 4))
+    return x + qp("bsf,fd->bsd", a, blk["wo_mlp"].astype(cd), seed=seed + 5)
+
+
+def forward(params, tokens, qflags, cfg: ModelConfig, quant: QuantConfig,
+            trainable_last_only: bool = False):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = x + params["pos_embed"][:S][None].astype(cd)
+    positions = jnp.arange(S)[None, :]
+    blocks = params["blocks"]
+    if trainable_last_only:
+        # freeze all but the last encoder layer (paper A.4.2)
+        frozen = jax.tree_util.tree_map(
+            lambda p: jax.lax.stop_gradient(p[:-1]), blocks)
+        last = jax.tree_util.tree_map(lambda p: p[-1:], blocks)
+        blocks = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), frozen, last)
+    x = tfm.run_block_stack(x, blocks, qflags, positions, cfg, quant,
+                            block_fn=bert_block)
+    return cm.rmsnorm(x, params["final_norm"])
+
+
+def loss_fn(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig,
+            trainable_last_only: bool = False):
+    del rng
+    h = forward(params, batch["tokens"], qflags, cfg, quant,
+                trainable_last_only)
+    cls = h[:, 0].astype(jnp.float32)
+    logits = cls @ params["cls_w"] + params["cls_b"]
+    return cm.softmax_xent(logits, batch["label"])
+
+
+@register_family("bert")
+def build_bert(cfg: ModelConfig, quant: QuantConfig) -> Model:
+    def batch_spec(batch: int, seq: int):
+        seq = min(seq or cfg.max_position, cfg.max_position)
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                "label": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+    def batch_axes():
+        return {"tokens": ("batch", "seq"), "label": ("batch",)}
+
+    return Model(
+        config=cfg, quant=quant,
+        init=functools.partial(init_params, cfg=cfg),
+        param_axes=lambda: param_axes(cfg),
+        loss_fn=functools.partial(loss_fn, cfg=cfg, quant=quant),
+        batch_spec=batch_spec,
+        batch_axes=batch_axes,
+    )

@@ -1,0 +1,205 @@
+"""Shared model components: norms, RoPE, attention, chunked losses.
+
+Conventions
+-----------
+* Params are nested dicts of arrays; a parallel pytree of *logical axis name
+  tuples* (strings) describes each leaf for the partitioner
+  (repro.parallel.partitioner).
+* Layer stacks are stored with a leading ``layers`` dim and executed with
+  ``lax.scan`` (keeps HLO size O(1) in depth); DPQuant per-layer flags ride
+  along as scan xs.
+* Attention is computed in *query chunks* with statically-banded key ranges
+  (exact causal FLOPs, flash-style memory) — see ``chunked_causal_attention``.
+* The LM loss never materializes (B, S, V) logits: ``chunked_lm_loss``
+  walks the sequence in chunks against the (possibly vocab-sharded) embedding.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.fake_quant import qeinsum
+
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    std = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def rmsnorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+def groupnorm(x, scale, bias, groups=8, eps=1e-5):
+    """GroupNorm over the channel (last) dim of NHWC tensors.
+
+    BatchNorm leaks cross-example statistics and is incompatible with
+    per-example DP gradients (Opacus imposes the same replacement).
+    """
+    b, h, w, c = x.shape
+    g = math.gcd(groups, c)
+    x32 = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = x32.mean(axis=(1, 2, 4), keepdims=True)
+    var = x32.var(axis=(1, 2, 4), keepdims=True)
+    x32 = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (x32.reshape(b, h, w, c) * scale + bias).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rope
+# --------------------------------------------------------------------------- #
+def rope(x, positions, theta=10_000.0):
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len, d_model, offset=0):
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * dim / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+def _softmax_attend(q, k, v, mask, scale):
+    """q: (B,Tq,H,D); k,v: (B,Tk,H,D); mask broadcastable (B,H,Tq,Tk)."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def chunked_causal_attention(q, k, v, *, chunk_q: int, causal: bool = True,
+                             window: Optional[int] = None,
+                             scale: Optional[float] = None):
+    """Flash-style attention with exact-causal (banded) static key slices.
+
+    The python loop over query chunks is unrolled at trace time; chunk ``i``
+    only reads keys ``[max(0, lo_i) : (i+1)*chunk_q]`` so the compiled HLO
+    carries exactly the causal/windowed FLOPs, and peak memory is one
+    (B, chunk_q, H, Tk_i) score block.
+    """
+    b, s, h, d = q.shape
+    tk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    cq = min(chunk_q, s)
+    n_chunks = (s + cq - 1) // cq
+    outs = []
+    for i in range(n_chunks):
+        q0, q1 = i * cq, min((i + 1) * cq, s)
+        qc = q[:, q0:q1]
+        k1 = min(q1, tk) if causal else tk
+        k0 = 0
+        if window is not None:
+            k0 = max(0, q0 - window)
+        kc, vc = k[:, k0:k1], v[:, k0:k1]
+        qpos = jnp.arange(q0, q1)[:, None]
+        kpos = jnp.arange(k0, k1)[None, :]
+        mask = jnp.ones((q1 - q0, k1 - k0), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        outs.append(_softmax_attend(qc, kc, vc, mask[None, None], scale))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def repeat_kv(x, n_rep: int):
+    """(B, S, KV, D) -> (B, S, KV*n_rep, D)."""
+    if n_rep == 1:
+        return x
+    b, s, kv, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, d)) \
+              .reshape(b, s, kv * n_rep, d)
+
+
+# --------------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------------- #
+def chunked_lm_loss(h, targets, embed, *, real_vocab: int, ce_chunk: int,
+                    mask=None):
+    """Mean next-token cross-entropy without materializing (B, S, V).
+
+    h: (B, S, d) hidden states aligned with ``targets`` (B, S) int32.
+    embed: (V_pad, d) — logits = h @ embed.T computed per sequence chunk.
+    ``mask``: optional (B, S) 0/1 loss mask.
+    """
+    b, s, dm = h.shape
+    vpad = embed.shape[0]
+    cc = min(ce_chunk, s)
+    n_chunks = (s + cc - 1) // cc
+    total = jnp.float32(0.0)
+    denom = jnp.float32(0.0)
+    vocab_ids = jnp.arange(vpad)
+    for i in range(n_chunks):
+        s0, s1 = i * cc, min((i + 1) * cc, s)
+        hc = h[:, s0:s1].astype(jnp.float32)
+        logits = jnp.einsum("bsd,vd->bsv", hc, embed.astype(jnp.float32))
+        logits = jnp.where(vocab_ids[None, None, :] < real_vocab,
+                           logits, -1e30)
+        tc = targets[:, s0:s1]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = lse - tgt
+        if mask is not None:
+            mc = mask[:, s0:s1].astype(jnp.float32)
+            total += (nll * mc).sum()
+            denom += mc.sum()
+        else:
+            total += nll.sum()
+            denom += jnp.float32(nll.size)
+    return total / jnp.maximum(denom, 1.0)
+
+
+def softmax_xent(logits, labels):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logits.astype(jnp.float32),
+                              labels[..., None], axis=-1)[..., 0]
+    return (lse - tgt).mean()
+
+
+# --------------------------------------------------------------------------- #
+# quantized projection helper
+# --------------------------------------------------------------------------- #
+def qproj(spec, x, w, *, seed, flag, quant_cfg):
+    """Policy-gated quantized einsum (see repro.quant.fake_quant)."""
+    return qeinsum(spec, x, w, seed=seed, flag=flag, fmt=quant_cfg.fmt,
+                   q_fwd=quant_cfg.quantize_fwd,
+                   q_dgrad=quant_cfg.quantize_dgrad,
+                   q_wgrad=quant_cfg.quantize_wgrad)

@@ -1,0 +1,143 @@
+"""DenseNet-121 (paper CNN), DP-compatible (GroupNorm).
+
+Blocks (6, 12, 24, 16), growth 32, bottleneck 4x, compression 0.5.
+DPQuant policy: each dense layer and each transition is one schedulable
+layer (policy_len = sum(blocks) + len(blocks) = 62 for 121).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantConfig
+from repro.models import common as cm
+from repro.models.registry import Model, register_family
+from repro.quant.fake_quant import qconv2d
+
+
+def _conv_init(key, shape):
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def _gn(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def init_params(key, cfg: ModelConfig):
+    g = cfg.growth_rate
+    bn_size = 4
+    c = 2 * g
+    keys = iter(jax.random.split(key, 4 * sum(cfg.densenet_blocks) + 16))
+    params = {"stem": {"conv": _conv_init(next(keys), (3, 3, cfg.in_channels, c)),
+                       "gn": _gn(c)}}
+    blocks = []
+    for bi, n in enumerate(cfg.densenet_blocks):
+        layers = []
+        for li in range(n):
+            layers.append({
+                "gn1": _gn(c),
+                "conv1": _conv_init(next(keys), (1, 1, c, bn_size * g)),
+                "gn2": _gn(bn_size * g),
+                "conv2": _conv_init(next(keys), (3, 3, bn_size * g, g)),
+            })
+            c += g
+        blk = {"layers": layers}
+        if bi < len(cfg.densenet_blocks) - 1:
+            out_c = c // 2
+            blk["transition"] = {"gn": _gn(c),
+                                 "conv": _conv_init(next(keys), (1, 1, c, out_c))}
+            c = out_c
+        blocks.append(blk)
+    params["blocks"] = blocks
+    params["final_gn"] = _gn(c)
+    params["head"] = {"w": jax.random.normal(next(keys), (c, cfg.num_classes),
+                                             jnp.float32) / math.sqrt(c),
+                      "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    conv_ax = (None, None, None, "mlp")
+    gn_ax = {"scale": (None,), "bias": (None,)}
+    blocks = []
+    for bi, n in enumerate(cfg.densenet_blocks):
+        blk = {"layers": [{"gn1": gn_ax, "conv1": conv_ax,
+                           "gn2": gn_ax, "conv2": conv_ax}
+                          for _ in range(n)]}
+        if bi < len(cfg.densenet_blocks) - 1:
+            blk["transition"] = {"gn": gn_ax, "conv": conv_ax}
+        blocks.append(blk)
+    return {"stem": {"conv": conv_ax, "gn": gn_ax}, "blocks": blocks,
+            "final_gn": gn_ax,
+            "head": {"w": (None, None), "b": (None,)}}
+
+
+def forward(params, image, qflags, cfg: ModelConfig, quant: QuantConfig):
+    def qc(x, w, flag, seed, stride=1):
+        return qconv2d(x, w, seed=jnp.uint32(seed), flag=flag,
+                       strides=(stride, stride), padding="SAME",
+                       fmt=quant.fmt, q_fwd=quant.quantize_fwd,
+                       q_dgrad=quant.quantize_dgrad,
+                       q_wgrad=quant.quantize_wgrad)
+
+    li = 0
+    x = qc(image, params["stem"]["conv"], qflags[li], 11 * li)
+    x = jax.nn.relu(cm.groupnorm(x, params["stem"]["gn"]["scale"],
+                                 params["stem"]["gn"]["bias"]))
+    for blk in params["blocks"]:
+        for lyr in blk["layers"]:
+            flag = qflags[li]
+            sd = 11 * li
+            h = jax.nn.relu(cm.groupnorm(x, lyr["gn1"]["scale"],
+                                         lyr["gn1"]["bias"]))
+            h = qc(h, lyr["conv1"], flag, sd)
+            h = jax.nn.relu(cm.groupnorm(h, lyr["gn2"]["scale"],
+                                         lyr["gn2"]["bias"]))
+            h = qc(h, lyr["conv2"], flag, sd + 1)
+            x = jnp.concatenate([x, h], axis=-1)
+            li += 1
+        if "transition" in blk:
+            flag = qflags[li]
+            sd = 11 * li
+            t = jax.nn.relu(cm.groupnorm(x, blk["transition"]["gn"]["scale"],
+                                         blk["transition"]["gn"]["bias"]))
+            t = qc(t, blk["transition"]["conv"], flag, sd)
+            x = jax.lax.reduce_window(
+                t, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+            li += 1
+    x = jax.nn.relu(cm.groupnorm(x, params["final_gn"]["scale"],
+                                 params["final_gn"]["bias"]))
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig):
+    del rng
+    logits = forward(params, batch["image"], qflags, cfg, quant)
+    return cm.softmax_xent(logits, batch["label"])
+
+
+@register_family("densenet")
+def build_densenet(cfg: ModelConfig, quant: QuantConfig) -> Model:
+    def batch_spec(batch: int, seq: int = 0):
+        s = cfg.image_size
+        return {"image": jax.ShapeDtypeStruct((batch, s, s, cfg.in_channels),
+                                              jnp.float32),
+                "label": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+    def batch_axes():
+        return {"image": ("batch", None, None, None), "label": ("batch",)}
+
+    return Model(
+        config=cfg, quant=quant,
+        init=functools.partial(init_params, cfg=cfg),
+        param_axes=lambda: param_axes(cfg),
+        loss_fn=functools.partial(loss_fn, cfg=cfg, quant=quant),
+        batch_spec=batch_spec,
+        batch_axes=batch_axes,
+    )

@@ -1,0 +1,338 @@
+"""Encoder-decoder transformer backbone (Whisper-medium assignment).
+
+Per the assignment, the audio frontend (conv + mel) is a STUB: the batch
+carries precomputed frame embeddings ``enc_embeds (B, S, d)``.  Sinusoidal
+positions on both sides (Whisper-style), MHA (kv = heads), GELU MLP.
+
+DPQuant policy spans encoder + decoder blocks: flags[0:n_enc] gate encoder
+blocks, flags[n_enc:] gate decoder blocks.
+
+Serving: ``prefill`` encodes + runs the decoder prompt, caching decoder
+self-attention KV and the cross-attention KV (computed once from the encoder
+output); ``decode_step`` extends the self cache only.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantConfig
+from repro.models import common as cm
+from repro.models.registry import Model, register_family
+from repro.parallel.axes import logical_constraint as lc
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def _attn_params(key, cfg, n, kv=None):
+    d, hp, hd = cfg.d_model, cfg.padded_heads, cfg.head_dim
+    kv = kv or cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    pdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": cm.dense_init(ks[0], (n, d, hp, hd), d, pdt),
+        "wk": cm.dense_init(ks[1], (n, d, kv, hd), d, pdt),
+        "wv": cm.dense_init(ks[2], (n, d, kv, hd), d, pdt),
+        "wo": cm.dense_init(ks[3], (n, hp, hd, d), hp * hd, pdt),
+    }
+
+
+_ATTN_AXES = {
+    "wq": ("layers", "embed", "heads", "head_dim"),
+    "wk": ("layers", "embed", "kv_heads", "head_dim"),
+    "wv": ("layers", "embed", "kv_heads", "head_dim"),
+    "wo": ("layers", "heads", "head_dim", "embed"),
+}
+
+
+def _mlp_params(key, cfg, n):
+    d, f = cfg.d_model, cfg.d_ff
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    return {
+        "wi": cm.dense_init(ks[0], (n, d, f), d, pdt),
+        "wo_mlp": cm.dense_init(ks[1], (n, f, d), f, pdt),
+    }
+
+
+_MLP_AXES = {"wi": ("layers", "embed", "mlp"),
+             "wo_mlp": ("layers", "mlp", "embed")}
+
+
+def init_params(key, cfg: ModelConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    ne, nd = cfg.n_enc_layers, cfg.n_dec_layers
+    enc = {"attn_norm": jnp.zeros((ne, cfg.d_model), pdt),
+           "mlp_norm": jnp.zeros((ne, cfg.d_model), pdt),
+           **_attn_params(ks[0], cfg, ne), **_mlp_params(ks[1], cfg, ne)}
+    dec = {"self_norm": jnp.zeros((nd, cfg.d_model), pdt),
+           "cross_norm": jnp.zeros((nd, cfg.d_model), pdt),
+           "mlp_norm": jnp.zeros((nd, cfg.d_model), pdt),
+           **{f"self_{k}": v for k, v in _attn_params(ks[2], cfg, nd).items()},
+           **{f"cross_{k}": v for k, v in _attn_params(ks[3], cfg, nd).items()},
+           **_mlp_params(ks[4], cfg, nd)}
+    return {
+        "embed": cm.embed_init(ks[5], (cfg.padded_vocab, cfg.d_model), pdt),
+        "enc_norm": jnp.zeros((cfg.d_model,), pdt),
+        "final_norm": jnp.zeros((cfg.d_model,), pdt),
+        "enc": enc,
+        "dec": dec,
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    enc = {"attn_norm": ("layers", "embed"), "mlp_norm": ("layers", "embed"),
+           **_ATTN_AXES, **_MLP_AXES}
+    dec = {"self_norm": ("layers", "embed"), "cross_norm": ("layers", "embed"),
+           "mlp_norm": ("layers", "embed"),
+           **{f"self_{k}": v for k, v in _ATTN_AXES.items()},
+           **{f"cross_{k}": v for k, v in _ATTN_AXES.items()},
+           **_MLP_AXES}
+    return {"embed": ("vocab", "embed"), "enc_norm": ("embed",),
+            "final_norm": ("embed",), "enc": enc, "dec": dec}
+
+
+# --------------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------------- #
+def _mha(h, prm, prefix, flag, seed, cfg, quant, kv_h=None, causal=False,
+         chunk_q=None):
+    """Self attention over h; returns (out, (k, v))."""
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = h.dtype
+    g = lambda k: prm[f"{prefix}{k}"] if prefix else prm[k]
+    q = qp("bsd,dhk->bshk", h, g("wq").astype(cd), seed=seed)
+    src = kv_h if kv_h is not None else h
+    k = qp("bsd,dhk->bshk", src, g("wk").astype(cd), seed=seed + 1)
+    v = qp("bsd,dhk->bshk", src, g("wv").astype(cd), seed=seed + 2)
+    n_rep = cfg.padded_heads // k.shape[2]
+    out = cm.chunked_causal_attention(
+        q, cm.repeat_kv(k, n_rep), cm.repeat_kv(v, n_rep),
+        chunk_q=chunk_q or cfg.attn_chunk_q, causal=causal,
+        scale=1.0 / math.sqrt(cfg.head_dim))
+    res = qp("bshk,hkd->bsd", out, g("wo").astype(cd), seed=seed + 3)
+    return res, (k, v)
+
+
+def _mlp(h, prm, flag, seed, cfg, quant):
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = h.dtype
+    a = jax.nn.gelu(qp("bsd,df->bsf", h, prm["wi"].astype(cd), seed=seed + 4))
+    a = lc(a, "batch", "seq", "mlp")
+    return qp("bsf,fd->bsd", a, prm["wo_mlp"].astype(cd), seed=seed + 5)
+
+
+def encode(params, enc_embeds, qflags, cfg: ModelConfig, quant: QuantConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S, _ = enc_embeds.shape
+    x = enc_embeds.astype(cd) + cm.sinusoidal_positions(
+        S, cfg.d_model).astype(cd)[None]
+    x = lc(x, "batch", "seq", "embed")
+
+    def block(carry, blk, flag, lidx):
+        seed = lidx.astype(jnp.uint32) * jnp.uint32(97)
+        h = cm.rmsnorm(carry, blk["attn_norm"]).astype(cd)
+        a, _ = _mha(h, blk, "", flag, seed, cfg, quant, causal=False)
+        carry = carry + a
+        h2 = cm.rmsnorm(carry, blk["mlp_norm"]).astype(cd)
+        return carry + _mlp(h2, blk, flag, seed, cfg, quant)
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def body(carry, xs):
+        blk, flag, lidx = xs
+        return block(carry, blk, flag, lidx), None
+
+    x, _ = jax.lax.scan(body, x, (params["enc"],
+                                  qflags[: cfg.n_enc_layers],
+                                  jnp.arange(cfg.n_enc_layers)))
+    return cm.rmsnorm(x, params["enc_norm"])
+
+
+def decode_train(params, tokens, enc_out, qflags, cfg, quant):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = x + cm.sinusoidal_positions(S, cfg.d_model).astype(cd)[None]
+    x = lc(x, "batch", "seq", "embed")
+    dec_flags = qflags[cfg.n_enc_layers:]
+
+    def block(carry, blk, flag, lidx):
+        seed = (lidx.astype(jnp.uint32) + jnp.uint32(1000)) * jnp.uint32(97)
+        h = cm.rmsnorm(carry, blk["self_norm"]).astype(cd)
+        a, _ = _mha(h, blk, "self_", flag, seed, cfg, quant, causal=True)
+        carry = carry + a
+        h2 = cm.rmsnorm(carry, blk["cross_norm"]).astype(cd)
+        c, _ = _mha(h2, blk, "cross_", flag, seed + 10, cfg, quant,
+                    kv_h=enc_out, causal=False)
+        carry = carry + c
+        h3 = cm.rmsnorm(carry, blk["mlp_norm"]).astype(cd)
+        return carry + _mlp(h3, blk, flag, seed, cfg, quant)
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def body(carry, xs):
+        blk, flag, lidx = xs
+        return block(carry, blk, flag, lidx), None
+
+    x, _ = jax.lax.scan(body, x, (params["dec"], dec_flags,
+                                  jnp.arange(cfg.n_dec_layers)))
+    return cm.rmsnorm(x, params["final_norm"])
+
+
+def loss_fn(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig):
+    del rng
+    enc_out = encode(params, batch["enc_embeds"], qflags, cfg, quant)
+    h = decode_train(params, batch["tokens"], enc_out, qflags, cfg, quant)
+    return cm.chunked_lm_loss(h[:, :-1], batch["tokens"][:, 1:],
+                              params["embed"], real_vocab=cfg.vocab_size,
+                              ce_chunk=cfg.ce_chunk)
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int):
+    cd = jnp.dtype(cfg.compute_dtype)
+    nd, kv, hd = cfg.n_dec_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "self_k": jax.ShapeDtypeStruct((nd, batch, kv, seq_len, hd), cd),
+        "self_v": jax.ShapeDtypeStruct((nd, batch, kv, seq_len, hd), cd),
+        "cross_k": jax.ShapeDtypeStruct((nd, batch, kv, seq_len, hd), cd),
+        "cross_v": jax.ShapeDtypeStruct((nd, batch, kv, seq_len, hd), cd),
+        "enc_len": jax.ShapeDtypeStruct((), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    kvax = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+    return {"self_k": kvax, "self_v": kvax, "cross_k": kvax,
+            "cross_v": kvax, "enc_len": None, "pos": None}
+
+
+def prefill(params, batch, cfg: ModelConfig, quant: QuantConfig,
+            cache_len=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    cd = jnp.dtype(cfg.compute_dtype)
+    qflags = jnp.zeros((cfg.n_enc_layers + cfg.n_dec_layers,), jnp.float32)
+    enc_out = encode(params, batch["enc_embeds"], qflags, cfg, quant)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = x + cm.sinusoidal_positions(S, cfg.d_model).astype(cd)[None]
+
+    def body(carry, xs):
+        blk, lidx = xs
+        seed = (lidx.astype(jnp.uint32) + jnp.uint32(1000)) * jnp.uint32(97)
+        zf = jnp.float32(0.0)
+        h = cm.rmsnorm(carry, blk["self_norm"]).astype(cd)
+        a, (sk, sv) = _mha(h, blk, "self_", zf, seed, cfg, quant, causal=True)
+        carry = carry + a
+        h2 = cm.rmsnorm(carry, blk["cross_norm"]).astype(cd)
+        c, (ck, cv) = _mha(h2, blk, "cross_", zf, seed + 10, cfg, quant,
+                           kv_h=enc_out, causal=False)
+        carry = carry + c
+        h3 = cm.rmsnorm(carry, blk["mlp_norm"]).astype(cd)
+        carry = carry + _mlp(h3, blk, zf, seed, cfg, quant)
+
+        def to_cache(t, n):
+            t = jnp.transpose(t, (0, 2, 1, 3))
+            if n > t.shape[2]:
+                t = jnp.pad(t, [(0, 0), (0, 0), (0, n - t.shape[2]), (0, 0)])
+            return t
+
+        return carry, (to_cache(sk, cache_len), to_cache(sv, cache_len),
+                       to_cache(ck, cache_len), to_cache(cv, cache_len))
+
+    x, (sks, svs, cks, cvs) = jax.lax.scan(
+        body, x, (params["dec"], jnp.arange(cfg.n_dec_layers)))
+    h_last = cm.rmsnorm(x[:, -1], params["final_norm"]).astype(jnp.float32)
+    logits = jnp.einsum("bd,vd->bv", h_last,
+                        params["embed"].astype(jnp.float32))
+    cache = {"self_k": sks, "self_v": svs, "cross_k": cks, "cross_v": cvs,
+             "enc_len": jnp.asarray(batch["enc_embeds"].shape[1], jnp.int32),
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def _sinusoidal_at(pos, d_model):
+    """Sinusoidal position embedding at a (traced) scalar position."""
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, 2 * dim / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
+    from repro.models.transformer import decode_attend
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token, axis=0).astype(cd)
+    x = x + _sinusoidal_at(pos, cfg.d_model).astype(cd)
+
+    def body(carry, xs):
+        blk, sk, sv, ck, cv = xs
+        h = cm.rmsnorm(carry, blk["self_norm"]).astype(cd)
+        q = jnp.einsum("bd,dhk->bhk", h, blk["self_wq"].astype(cd))
+        k = jnp.einsum("bd,dhk->bhk", h, blk["self_wk"].astype(cd))
+        v = jnp.einsum("bd,dhk->bhk", h, blk["self_wv"].astype(cd))
+        sk = jax.lax.dynamic_update_slice(
+            sk, k[:, :, None, :].astype(sk.dtype), (0, 0, pos, 0))
+        sv = jax.lax.dynamic_update_slice(
+            sv, v[:, :, None, :].astype(sv.dtype), (0, 0, pos, 0))
+        ctx = decode_attend(q, sk, sv, pos, cfg)
+        carry = carry + jnp.einsum("bhk,hkd->bd", ctx.astype(cd),
+                                   blk["self_wo"].astype(cd))
+        h2 = cm.rmsnorm(carry, blk["cross_norm"]).astype(cd)
+        q2 = jnp.einsum("bd,dhk->bhk", h2, blk["cross_wq"].astype(cd))
+        ctx2 = decode_attend(q2, ck, cv, cache["enc_len"] - 1, cfg)
+        carry = carry + jnp.einsum("bhk,hkd->bd", ctx2.astype(cd),
+                                   blk["cross_wo"].astype(cd))
+        h3 = cm.rmsnorm(carry, blk["mlp_norm"]).astype(cd)
+        a = jax.nn.gelu(jnp.einsum("bd,df->bf", h3, blk["wi"].astype(cd)))
+        carry = carry + jnp.einsum("bf,fd->bd", a, blk["wo_mlp"].astype(cd))
+        return carry, (sk, sv)
+
+    x, (sks, svs) = jax.lax.scan(
+        body, x, (params["dec"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    h_last = cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32)
+    logits = jnp.einsum("bd,vd->bv", h_last,
+                        params["embed"].astype(jnp.float32))
+    new_cache = dict(cache, self_k=sks, self_v=svs, pos=pos + 1)
+    return logits, new_cache
+
+
+@register_family("encdec")
+def build_encdec(cfg: ModelConfig, quant: QuantConfig) -> Model:
+    def batch_spec(batch: int, seq: int):
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "enc_embeds": jax.ShapeDtypeStruct(
+                (batch, seq, cfg.d_model), jnp.dtype(cfg.compute_dtype)),
+        }
+
+    def batch_axes():
+        return {"tokens": ("batch", "seq"),
+                "enc_embeds": ("batch", "seq", "embed")}
+
+    return Model(
+        config=cfg, quant=quant,
+        init=functools.partial(init_params, cfg=cfg),
+        param_axes=lambda: param_axes(cfg),
+        loss_fn=functools.partial(loss_fn, cfg=cfg, quant=quant),
+        batch_spec=batch_spec,
+        batch_axes=batch_axes,
+        prefill=functools.partial(prefill, cfg=cfg, quant=quant),
+        decode_step=functools.partial(decode_step, cfg=cfg, quant=quant),
+        cache_spec=functools.partial(cache_spec, cfg),
+        cache_axes=lambda: cache_axes(cfg),
+    )

@@ -1,0 +1,517 @@
+"""Griffin / RecurrentGemma hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern 1:2 attention:recurrent — (rec, rec, local-attn) repeating.
+To keep ``lax.scan`` homogeneous with heterogeneous mixers, layers are
+grouped into *superblocks* of one pattern period (scanned), plus an unrolled
+recurrent tail when depth % period != 0 (38 = 12*3 + 2 for the 9b config).
+
+RG-LRU (Griffin, De et al. 2024):
+    r_t = sigmoid(y_t @ W_a);  i_t = sigmoid(y_t @ W_x)
+    log a_t = -c * softplus(Lambda) * r_t           (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+Training/prefill evaluates the input-dependent linear recurrence with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly); decode is O(1).
+The recurrence is elementwise, so it shards perfectly over the ``model`` axis
+(lru width dim) with zero collectives; only the projections communicate.
+
+Deviation note: we use dense gate matrices W_a/W_x (the paper uses
+block-diagonal); parameter count is higher but the schedule/semantics are
+identical.  DPQuant quantizes all projections; the elementwise recurrence
+stays fp32 (DESIGN.md §4).
+
+Local attention: MQA (kv=1), RoPE, sliding window; decode uses a ring cache
+of ``window`` entries — total cache is O(window + lru_width) per layer,
+which is what makes the ``long_500k`` cell runnable.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantConfig
+from repro.models import common as cm
+from repro.models.mamba2 import _causal_conv
+from repro.models.registry import Model, register_family
+from repro.parallel.axes import logical_constraint as lc
+
+C_RGLRU = 8.0
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def _init_rec(key, cfg: ModelConfig, n: int):
+    d, W = cfg.d_model, cfg.lru_width
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.zeros((n, d), pdt),
+        "w_x": cm.dense_init(ks[0], (n, d, W), d, pdt),
+        "w_gate": cm.dense_init(ks[1], (n, d, W), d, pdt),
+        "conv_w": cm.dense_init(ks[2], (n, cfg.conv_width, W),
+                                cfg.conv_width, pdt),
+        "conv_b": jnp.zeros((n, W), pdt),
+        "gate_a": cm.dense_init(ks[3], (n, W, W), W, pdt),
+        "gate_x": cm.dense_init(ks[4], (n, W, W), W, pdt),
+        "lam": jnp.broadcast_to(jnp.linspace(-2.0, 2.0, W),
+                                (n, W)).astype(jnp.float32),
+        "w_out": cm.dense_init(ks[5], (n, W, d), W, pdt),
+    }
+
+
+_REC_AXES = {
+    "norm": ("layers", "embed"),
+    "w_x": ("layers", "embed", "mlp"),
+    "w_gate": ("layers", "embed", "mlp"),
+    "conv_w": ("layers", "conv", "mlp"),
+    "conv_b": ("layers", "mlp"),
+    "gate_a": ("layers", None, "mlp"),
+    "gate_x": ("layers", None, "mlp"),
+    "lam": ("layers", "mlp"),
+    "w_out": ("layers", "mlp", "embed"),
+}
+
+
+def _init_attn(key, cfg: ModelConfig, n: int):
+    d, hp, hd = cfg.d_model, cfg.padded_heads, cfg.head_dim
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.zeros((n, d), pdt),
+        "wq": cm.dense_init(ks[0], (n, d, hp, hd), d, pdt),
+        "wk": cm.dense_init(ks[1], (n, d, 1, hd), d, pdt),
+        "wv": cm.dense_init(ks[2], (n, d, 1, hd), d, pdt),
+        "wo": cm.dense_init(ks[3], (n, hp, hd, d), hp * hd, pdt),
+    }
+
+
+_ATTN_AXES = {
+    "norm": ("layers", "embed"),
+    "wq": ("layers", "embed", "heads", "head_dim"),
+    "wk": ("layers", "embed", "kv_heads", "head_dim"),
+    "wv": ("layers", "embed", "kv_heads", "head_dim"),
+    "wo": ("layers", "heads", "head_dim", "embed"),
+}
+
+
+def _init_mlp(key, cfg: ModelConfig, n: int):
+    d, f = cfg.d_model, cfg.d_ff
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "mlp_norm": jnp.zeros((n, d), pdt),
+        "wi_gate": cm.dense_init(ks[0], (n, d, f), d, pdt),
+        "wi_up": cm.dense_init(ks[1], (n, d, f), d, pdt),
+        "wo_mlp": cm.dense_init(ks[2], (n, f, d), f, pdt),
+    }
+
+
+_MLP_AXES = {
+    "mlp_norm": ("layers", "embed"),
+    "wi_gate": ("layers", "embed", "mlp"),
+    "wi_up": ("layers", "embed", "mlp"),
+    "wo_mlp": ("layers", "mlp", "embed"),
+}
+
+
+def _layout(cfg: ModelConfig):
+    period = len(cfg.block_pattern) or 3
+    n_super = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_super * period
+    return period, n_super, n_tail
+
+
+def init_params(key, cfg: ModelConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    period, n_super, n_tail = _layout(cfg)
+    ks = jax.random.split(key, 10)
+    sb = {
+        "rec1": {**_init_rec(ks[0], cfg, n_super), **_init_mlp(ks[1], cfg, n_super)},
+        "rec2": {**_init_rec(ks[2], cfg, n_super), **_init_mlp(ks[3], cfg, n_super)},
+        "attn": {**_init_attn(ks[4], cfg, n_super), **_init_mlp(ks[5], cfg, n_super)},
+    }
+    params = {
+        "embed": cm.embed_init(ks[6], (cfg.padded_vocab, cfg.d_model), pdt),
+        "final_norm": jnp.zeros((cfg.d_model,), pdt),
+        "superblocks": sb,
+    }
+    if n_tail:
+        params["tail"] = {**_init_rec(ks[7], cfg, n_tail),
+                          **_init_mlp(ks[8], cfg, n_tail)}
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    _, _, n_tail = _layout(cfg)
+    rec_axes = {**_REC_AXES, **_MLP_AXES}
+    axes = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "superblocks": {
+            "rec1": dict(rec_axes),
+            "rec2": dict(rec_axes),
+            "attn": {**_ATTN_AXES, **_MLP_AXES},
+        },
+    }
+    if n_tail:
+        axes["tail"] = dict(rec_axes)
+    return axes
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU
+# --------------------------------------------------------------------------- #
+def rglru_scan(log_a, inp, h0=None):
+    """h_t = exp(log_a_t) * h_{t-1} + inp_t along axis 1 (S)."""
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        inp = inp.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, inp), axis=1)
+    return h
+
+
+def rec_mixer(x, prm, flag, seed, cfg: ModelConfig, quant: QuantConfig,
+              conv_state=None, h0=None):
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = x.dtype
+    y = cm.rmsnorm(x, prm["norm"]).astype(cd)
+    xb = qp("bsd,dw->bsw", y, prm["w_x"].astype(cd), seed=seed)
+    gate = qp("bsd,dw->bsw", y, prm["w_gate"].astype(cd), seed=seed + 1)
+    xb, new_conv = _causal_conv(xb, prm["conv_w"], prm["conv_b"],
+                                state=conv_state, activation=None)
+    xb = lc(xb, "batch", "seq", "mlp")
+    r = jax.nn.sigmoid(qp("bsw,wu->bsu", xb, prm["gate_a"].astype(cd),
+                          seed=seed + 2).astype(jnp.float32))
+    i = jax.nn.sigmoid(qp("bsw,wu->bsu", xb, prm["gate_x"].astype(cd),
+                          seed=seed + 3).astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(prm["lam"])[None, None, :] * r
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    inp = mult * i * xb.astype(jnp.float32)
+    h = rglru_scan(log_a, inp, h0=h0)
+    out = (h.astype(cd)) * jax.nn.gelu(gate)
+    res = qp("bsw,wd->bsd", out, prm["w_out"].astype(cd), seed=seed + 4)
+    return res, (new_conv, h[:, -1])
+
+
+def attn_mixer(x, prm, flag, seed, positions, cfg: ModelConfig,
+               quant: QuantConfig):
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = x.dtype
+    h = cm.rmsnorm(x, prm["norm"]).astype(cd)
+    q = qp("bsd,dhk->bshk", h, prm["wq"].astype(cd), seed=seed)
+    k = qp("bsd,dhk->bshk", h, prm["wk"].astype(cd), seed=seed + 1)
+    v = qp("bsd,dhk->bshk", h, prm["wv"].astype(cd), seed=seed + 2)
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    kr = cm.repeat_kv(k, cfg.padded_heads)
+    vr = cm.repeat_kv(v, cfg.padded_heads)
+    out = cm.chunked_causal_attention(
+        q, kr, vr, chunk_q=cfg.attn_chunk_q, causal=True,
+        window=cfg.attn_window, scale=1.0 / math.sqrt(cfg.head_dim))
+    res = qp("bshk,hkd->bsd", out, prm["wo"].astype(cd), seed=seed + 3)
+    return res, (k, v)
+
+
+def mlp(x, prm, flag, seed, cfg: ModelConfig, quant: QuantConfig):
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = x.dtype
+    h = cm.rmsnorm(x, prm["mlp_norm"]).astype(cd)
+    g = qp("bsd,df->bsf", h, prm["wi_gate"].astype(cd), seed=seed + 5)
+    u = qp("bsd,df->bsf", h, prm["wi_up"].astype(cd), seed=seed + 6)
+    return qp("bsf,fd->bsd", jax.nn.gelu(g) * u, prm["wo_mlp"].astype(cd),
+              seed=seed + 7)
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+def forward_hidden(params, tokens, qflags, cfg: ModelConfig,
+                   quant: QuantConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    period, n_super, n_tail = _layout(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    x = lc(x, "batch", "seq", "embed")
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    flags_sb = qflags[: n_super * period].reshape(n_super, period)
+
+    def superblock(carry, sb, flags, sidx):
+        seed = sidx.astype(jnp.uint32) * jnp.uint32(397)
+        r1, _ = rec_mixer(carry, sb["rec1"], flags[0], seed, cfg, quant)
+        carry = carry + r1
+        carry = carry + mlp(carry, sb["rec1"], flags[0], seed, cfg, quant)
+        r2, _ = rec_mixer(carry, sb["rec2"], flags[1], seed + 11, cfg, quant)
+        carry = carry + r2
+        carry = carry + mlp(carry, sb["rec2"], flags[1], seed + 11, cfg, quant)
+        a, _ = attn_mixer(carry, sb["attn"], flags[2], seed + 23, positions,
+                          cfg, quant)
+        carry = carry + a
+        carry = carry + mlp(carry, sb["attn"], flags[2], seed + 23, cfg, quant)
+        return carry
+
+    if cfg.remat:
+        superblock = jax.checkpoint(superblock)
+
+    def body(carry, xs):
+        sb, flags, sidx = xs
+        return superblock(carry, sb, flags, sidx), None
+
+    x, _ = jax.lax.scan(
+        body, x, (params["superblocks"], flags_sb, jnp.arange(n_super)))
+
+    if n_tail:
+        flags_tail = qflags[n_super * period:]
+
+        def tail_body(carry, xs):
+            prm, flag, tidx = xs
+            seed = (jnp.uint32(1_000_003)
+                    + tidx.astype(jnp.uint32) * jnp.uint32(397))
+            r, _ = rec_mixer(carry, prm, flag, seed, cfg, quant)
+            carry = carry + r
+            carry = carry + mlp(carry, prm, flag, seed, cfg, quant)
+            return carry, None
+
+        x, _ = jax.lax.scan(
+            tail_body, x, (params["tail"], flags_tail, jnp.arange(n_tail)))
+    return cm.rmsnorm(x, params["final_norm"])
+
+
+def lm_loss(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig):
+    del rng
+    tokens = batch["tokens"]
+    h = forward_hidden(params, tokens, qflags, cfg, quant)
+    return cm.chunked_lm_loss(h[:, :-1], tokens[:, 1:], params["embed"],
+                              real_vocab=cfg.vocab_size, ce_chunk=cfg.ce_chunk)
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int):
+    cd = jnp.dtype(cfg.compute_dtype)
+    period, n_super, n_tail = _layout(cfg)
+    W = cfg.lru_width
+    win = min(cfg.attn_window, seq_len)
+    cw = cfg.conv_width - 1
+
+    def rec_state(n):
+        return {"h": jax.ShapeDtypeStruct((n, batch, W), jnp.float32),
+                "conv": jax.ShapeDtypeStruct((n, batch, cw, W), cd)}
+
+    spec = {
+        "rec1": rec_state(n_super),
+        "rec2": rec_state(n_super),
+        "attn": {
+            "k": jax.ShapeDtypeStruct((n_super, batch, 1, win, cfg.head_dim), cd),
+            "v": jax.ShapeDtypeStruct((n_super, batch, 1, win, cfg.head_dim), cd),
+        },
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if n_tail:
+        spec["tail"] = rec_state(n_tail)
+    return spec
+
+
+def cache_axes(cfg: ModelConfig):
+    _, _, n_tail = _layout(cfg)
+
+    def rec_axes():
+        return {"h": ("layers", "batch", "mlp"),
+                "conv": ("layers", "batch", None, "mlp")}
+
+    axes = {
+        "rec1": rec_axes(), "rec2": rec_axes(),
+        "attn": {"k": ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+                 "v": ("layers", "batch", "kv_heads", "kv_seq", "head_dim")},
+        "pos": None,
+    }
+    if n_tail:
+        axes["tail"] = rec_axes()
+    return axes
+
+
+def prefill(params, batch, cfg: ModelConfig, quant: QuantConfig,
+            cache_len=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    period, n_super, n_tail = _layout(cfg)
+    win = min(cfg.attn_window, cache_len or S)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    positions = jnp.arange(S)[None, :]
+    zf = jnp.zeros((period,), jnp.float32)
+
+    def sb_body(carry, xs):
+        sb, sidx = xs
+        seed = sidx.astype(jnp.uint32) * jnp.uint32(397)
+        r1, st1 = rec_mixer(carry, sb["rec1"], zf[0], seed, cfg, quant)
+        carry = carry + r1
+        carry = carry + mlp(carry, sb["rec1"], zf[0], seed, cfg, quant)
+        r2, st2 = rec_mixer(carry, sb["rec2"], zf[1], seed + 11, cfg, quant)
+        carry = carry + r2
+        carry = carry + mlp(carry, sb["rec2"], zf[1], seed + 11, cfg, quant)
+        a, (k, v) = attn_mixer(carry, sb["attn"], zf[2], seed + 23, positions,
+                               cfg, quant)
+        carry = carry + a
+        carry = carry + mlp(carry, sb["attn"], zf[2], seed + 23, cfg, quant)
+        # ring cache = last `win` positions (slot = pos % win aligns when
+        # S % win == 0; otherwise roll)
+        kc = jnp.transpose(k[:, -win:], (0, 2, 1, 3))
+        vc = jnp.transpose(v[:, -win:], (0, 2, 1, 3))
+        shift = S % win
+        if shift:
+            kc = jnp.roll(kc, shift, axis=2)
+            vc = jnp.roll(vc, shift, axis=2)
+        ys = ({"h": st1[1], "conv": st1[0]},
+              {"h": st2[1], "conv": st2[0]},
+              {"k": kc, "v": vc})
+        return carry, ys
+
+    x, (st_r1, st_r2, st_attn) = jax.lax.scan(
+        sb_body, x, (params["superblocks"], jnp.arange(n_super)))
+
+    cache = {"rec1": st_r1, "rec2": st_r2, "attn": st_attn,
+             "pos": jnp.asarray(S, jnp.int32)}
+
+    if n_tail:
+        def tail_body(carry, xs):
+            prm, tidx = xs
+            seed = (jnp.uint32(1_000_003)
+                    + tidx.astype(jnp.uint32) * jnp.uint32(397))
+            r, st = rec_mixer(carry, prm, zf[0], seed, cfg, quant)
+            carry = carry + r
+            carry = carry + mlp(carry, prm, zf[0], seed, cfg, quant)
+            return carry, {"h": st[1], "conv": st[0]}
+
+        x, st_tail = jax.lax.scan(tail_body, x,
+                                  (params["tail"], jnp.arange(n_tail)))
+        cache["tail"] = st_tail
+
+    h_last = cm.rmsnorm(x[:, -1], params["final_norm"]).astype(jnp.float32)
+    logits = jnp.einsum("bd,vd->bv", h_last,
+                        params["embed"].astype(jnp.float32))
+    return logits, cache
+
+
+def _rec_decode(x, prm, st, cfg, cd):
+    """One-token RG-LRU update. x: (B, d)."""
+    y = cm.rmsnorm(x, prm["norm"]).astype(cd)
+    xb = jnp.einsum("bd,dw->bw", y, prm["w_x"].astype(cd))
+    gate = jnp.einsum("bd,dw->bw", y, prm["w_gate"].astype(cd))
+    xw = jnp.concatenate([st["conv"].astype(cd), xb[:, None, :]], axis=1)
+    xb = jnp.einsum("bwd,wd->bd", xw, prm["conv_w"].astype(cd)) \
+        + prm["conv_b"][None, :]
+    new_conv = xw[:, 1:]
+    r = jax.nn.sigmoid(jnp.einsum("bw,wu->bu", xb,
+                                  prm["gate_a"].astype(cd)).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bw,wu->bu", xb,
+                                  prm["gate_x"].astype(cd)).astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(prm["lam"])[None, :] * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    h = a * st["h"] + mult * i * xb.astype(jnp.float32)
+    out = h.astype(cd) * jax.nn.gelu(gate)
+    res = jnp.einsum("bw,wd->bd", out, prm["w_out"].astype(cd))
+    return res, {"h": h, "conv": new_conv}
+
+
+def _mlp_decode(x, prm, cd):
+    h = cm.rmsnorm(x, prm["mlp_norm"]).astype(cd)
+    g = jnp.einsum("bd,df->bf", h, prm["wi_gate"].astype(cd))
+    u = jnp.einsum("bd,df->bf", h, prm["wi_up"].astype(cd))
+    return jnp.einsum("bf,fd->bd", jax.nn.gelu(g) * u,
+                      prm["wo_mlp"].astype(cd))
+
+
+def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = token.shape[0]
+    period, n_super, n_tail = _layout(cfg)
+    pos = cache["pos"]
+    win = cache["attn"]["k"].shape[3]
+    slot = jnp.mod(pos, win)
+    x = jnp.take(params["embed"], token, axis=0).astype(cd)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def sb_body(carry, xs):
+        sb, st1, st2, sta = xs
+        r1, nst1 = _rec_decode(carry, sb["rec1"], st1, cfg, cd)
+        carry = carry + r1
+        carry = carry + _mlp_decode(carry, sb["rec1"], cd)
+        r2, nst2 = _rec_decode(carry, sb["rec2"], st2, cfg, cd)
+        carry = carry + r2
+        carry = carry + _mlp_decode(carry, sb["rec2"], cd)
+        # windowed MQA decode
+        h = cm.rmsnorm(carry, sb["attn"]["norm"]).astype(cd)
+        q = jnp.einsum("bd,dhk->bhk", h, sb["attn"]["wq"].astype(cd))
+        k = jnp.einsum("bd,dhk->bhk", h, sb["attn"]["wk"].astype(cd))
+        v = jnp.einsum("bd,dhk->bhk", h, sb["attn"]["wv"].astype(cd))
+        q = cm.rope(q[:, None], positions, cfg.rope_theta)[:, 0]
+        k = cm.rope(k[:, None], positions, cfg.rope_theta)[:, 0]
+        kc = jax.lax.dynamic_update_slice(
+            sta["k"], k[:, :, None, :].astype(cd), (0, 0, slot, 0))
+        vc = jax.lax.dynamic_update_slice(
+            sta["v"], v[:, :, None, :].astype(cd), (0, 0, slot, 0))
+        # slot j holds absolute position p = pos - ((pos - j) mod win)
+        j = jnp.arange(win)
+        stored = pos - jnp.mod(pos - j, win)
+        valid = stored >= jnp.maximum(0, pos - win + 1)
+        scores = jnp.einsum("bhk,bgsk->bhs", q.astype(jnp.float32),
+                            kc.astype(jnp.float32)) / math.sqrt(cfg.head_dim)
+        scores = jnp.where(valid[None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhs,bgsk->bhk", probs.astype(cd), vc)
+        a = jnp.einsum("bhk,hkd->bd", ctx, sb["attn"]["wo"].astype(cd))
+        carry = carry + a
+        carry = carry + _mlp_decode(carry, sb["attn"], cd)
+        return carry, (nst1, nst2, {"k": kc, "v": vc})
+
+    x, (nst1, nst2, nsta) = jax.lax.scan(
+        sb_body, x,
+        (params["superblocks"], cache["rec1"], cache["rec2"], cache["attn"]))
+    new_cache = {"rec1": nst1, "rec2": nst2, "attn": nsta, "pos": pos + 1}
+
+    if n_tail:
+        def tail_body(carry, xs):
+            prm, st = xs
+            r, nst = _rec_decode(carry, prm, st, cfg, cd)
+            carry = carry + r
+            carry = carry + _mlp_decode(carry, prm, cd)
+            return carry, nst
+
+        x, nst_tail = jax.lax.scan(tail_body, x,
+                                   (params["tail"], cache["tail"]))
+        new_cache["tail"] = nst_tail
+
+    h_last = cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32)
+    logits = jnp.einsum("bd,vd->bv", h_last,
+                        params["embed"].astype(jnp.float32))
+    return logits, new_cache
+
+
+@register_family("hybrid")
+def build_hybrid(cfg: ModelConfig, quant: QuantConfig) -> Model:
+    from repro.models.transformer import _dense_batch_spec, _dense_batch_axes
+    return Model(
+        config=cfg, quant=quant,
+        init=functools.partial(init_params, cfg=cfg),
+        param_axes=lambda: param_axes(cfg),
+        loss_fn=functools.partial(lm_loss, cfg=cfg, quant=quant),
+        batch_spec=_dense_batch_spec(cfg),
+        batch_axes=_dense_batch_axes(cfg),
+        prefill=functools.partial(prefill, cfg=cfg, quant=quant),
+        decode_step=functools.partial(decode_step, cfg=cfg, quant=quant),
+        cache_spec=functools.partial(cache_spec, cfg),
+        cache_axes=lambda: cache_axes(cfg),
+    )

@@ -1,0 +1,376 @@
+"""Mamba-2 (SSD — state-space duality) language model.
+
+Chunked SSD algorithm (Dao & Gu 2024, "minimal SSD" formulation):
+
+  * within-chunk: quadratic attention-like term masked by the decay kernel
+    ``L[i,j] = exp(cumsum(dA)_i - cumsum(dA)_j)`` (i >= j);
+  * cross-chunk: per-chunk end states carried through an O(n_chunks) scan.
+
+This gives exact linear-recurrence semantics with matmul-dominant compute —
+the TPU-friendly reformulation (the recurrence itself never runs step-by-step
+during training).  Decode is the O(1) state update.
+
+DPQuant applicability (DESIGN.md §4): the in/out projections and the two SSD
+contraction GEMMs quantize under the block flag; the elementwise decay math
+stays fp32 (no GEMM to quantize).
+
+Shapes: ngroups = 1 (B/C shared across heads), following the 130m config.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantConfig
+from repro.models import common as cm
+from repro.models.registry import Model, register_family
+from repro.parallel.axes import logical_constraint as lc
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def init_params(key, cfg: ModelConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    d, di, H, N = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    L = cfg.n_layers
+    w = cfg.conv_width
+    keys = jax.random.split(key, 8)
+    # fused in_proj: [z (di), x (di), B (N), C (N), dt (H)]
+    proj_out = 2 * di + 2 * N + H
+    blocks = {
+        "norm": jnp.zeros((L, d), pdt),
+        "in_proj": cm.dense_init(keys[0], (L, d, proj_out), d, pdt),
+        "conv_w": cm.dense_init(keys[1], (L, w, di), w, pdt),
+        "conv_b": jnp.zeros((L, di), pdt),
+        "dt_bias": jnp.zeros((L, H), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.linspace(1.0, 16.0, H), (L, H)).astype(jnp.float32)),
+        "D": jnp.ones((L, H), jnp.float32),
+        "out_norm": jnp.zeros((L, di), pdt),
+        "out_proj": cm.dense_init(keys[2], (L, di, d), di, pdt),
+    }
+    return {
+        "embed": cm.embed_init(keys[3], (cfg.padded_vocab, d), pdt),
+        "final_norm": jnp.zeros((d,), pdt),
+        "blocks": blocks,
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    return {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "blocks": {
+            "norm": ("layers", "embed"),
+            "in_proj": ("layers", "embed", "mlp"),
+            "conv_w": ("layers", "conv", "mlp"),
+            "conv_b": ("layers", "mlp"),
+            "dt_bias": ("layers", "heads"),
+            "A_log": ("layers", "heads"),
+            "D": ("layers", "heads"),
+            "out_norm": ("layers", "mlp"),
+            "out_proj": ("layers", "mlp", "embed"),
+        },
+    }
+
+
+# --------------------------------------------------------------------------- #
+# SSD core
+# --------------------------------------------------------------------------- #
+def _segsum(a):
+    """a: (..., Q) -> (..., Q, Q) lower-tri cumulative sums:
+    out[i, j] = sum_{k=j+1..i} a[k] for i >= j, -inf above diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, flag, seed, quant: QuantConfig):
+    """SSD forward. Shapes:
+      x:  (b, S, H, P)    inputs per head
+      dt: (b, S, H)       positive step sizes
+      A:  (H,)            negative decay rates
+      B:  (b, S, N)       input maps (ngroups=1)
+      C:  (b, S, N)       output maps
+    Returns y: (b, S, H, P).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q != 0:
+        # pad tail (dt=0 -> unit decay, x=0 -> no state contribution)
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xr = x.reshape(b, nc, Q, H, P)
+    dtr = dt.reshape(b, nc, Q, H)
+    Br = B.reshape(b, nc, Q, N)
+    Cr = C.reshape(b, nc, Q, N)
+
+    dA = dtr * A[None, None, None, :]                 # (b, nc, Q, H) negative
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+
+    # ---- within-chunk (quadratic, attention-like) ----
+    Lmat = jnp.exp(_segsum(jnp.swapaxes(dA, 2, 3)))   # (b, nc, H, Q, Q)
+    CB = qp("bcln,bcsn->bcls", Cr, Br, seed=seed + 30)  # (b, nc, Q, Q)
+    gate = CB[:, :, None] * Lmat                       # (b, nc, H, L, S)
+    xdt = xr * dtr[..., None]
+    y_diag = qp("bchls,bcshp->bclhp",
+                gate.astype(xdt.dtype), xdt, seed=seed + 31)
+
+    # ---- per-chunk end states ----
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b, nc, Q, H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn",
+                        Br.astype(jnp.float32), decay_states.astype(jnp.float32),
+                        xdt.astype(jnp.float32))            # (b, nc, H, P, N)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (b, nc, H)
+
+    def scan_fn(carry, inp):
+        s_c, g_c = inp                                      # (b,H,P,N), (b,H)
+        new = carry * g_c[:, :, None, None] + s_c
+        return new, carry                                   # emit state BEFORE chunk
+
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.swapaxes(states, 0, 1), jnp.swapaxes(chunk_decay, 0, 1)))
+    prev_states = jnp.swapaxes(prev_states, 0, 1)           # (b, nc, H, P, N)
+
+    # ---- cross-chunk output ----
+    out_decay = jnp.exp(dA_cum)                             # (b, nc, Q, H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       Cr.astype(jnp.float32), prev_states,
+                       out_decay.astype(jnp.float32))
+
+    y = y_diag.astype(jnp.float32) + y_off
+    return y.reshape(b, S, H, P)[:, :S_orig].astype(x.dtype)
+
+
+def _causal_conv(x, w, b, state=None, activation=jax.nn.silu):
+    """Depthwise causal conv. x: (B, S, D); w: (W, D); returns (y, new_state).
+
+    ``state``: (B, W-1, D) trailing context for decode continuity."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    y = y + b[None, None, :]
+    if activation is not None:
+        y = activation(y)
+    return y, new_state
+
+
+def mamba_block(x, blk, flag, lidx, positions, cfg: ModelConfig,
+                quant: QuantConfig, conv_state=None, ssm_state=None):
+    """Full Mamba-2 block (train/prefill path). Returns residual output."""
+    del positions
+    d, di, H, N = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    seed = lidx.astype(jnp.uint32) * jnp.uint32(97)
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = x.dtype
+
+    h = cm.rmsnorm(x, blk["norm"]).astype(cd)
+    zxbcdt = qp("bsd,de->bse", h, blk["in_proj"].astype(cd), seed=seed)
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di:2 * di]
+    Bc = zxbcdt[..., 2 * di:2 * di + N].astype(jnp.float32)
+    Cc = zxbcdt[..., 2 * di + N:2 * di + 2 * N].astype(jnp.float32)
+    dt = zxbcdt[..., 2 * di + 2 * N:].astype(jnp.float32)
+
+    xs, new_conv = _causal_conv(xs, blk["conv_w"], blk["conv_b"], conv_state)
+    dt = jax.nn.softplus(dt + blk["dt_bias"][None, None, :])
+    A = -jnp.exp(blk["A_log"])
+
+    xh = xs.reshape(*xs.shape[:2], H, P)
+    y = ssd_chunked(xh, dt, A, Bc, Cc, cfg.ssm_chunk, flag, seed, quant)
+    y = y + xh.astype(jnp.float32) * blk["D"][None, None, :, None]
+    y = y.reshape(*xs.shape[:2], di).astype(cd)
+    # gated RMSNorm (mamba2 style)
+    y = cm.rmsnorm(y * jax.nn.silu(z), blk["out_norm"])
+    out = qp("bse,ed->bsd", y.astype(cd), blk["out_proj"].astype(cd),
+             seed=seed + 1)
+    return out, new_conv
+
+
+def forward_hidden(params, tokens, qflags, cfg: ModelConfig,
+                   quant: QuantConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = lc(x, "batch", "seq", "embed")
+    L = cfg.n_layers
+
+    def apply_block(carry, blk, flag, lidx):
+        out, _ = mamba_block(carry, blk, flag, lidx, None, cfg, quant)
+        return carry + out
+
+    if cfg.remat:
+        apply_block = jax.checkpoint(apply_block)
+
+    def body(carry, xs):
+        blk, flag, lidx = xs
+        return apply_block(carry, blk, flag, lidx), None
+
+    x, _ = jax.lax.scan(body, x, (params["blocks"], qflags, jnp.arange(L)))
+    return cm.rmsnorm(x, params["final_norm"])
+
+
+def lm_loss(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig):
+    del rng
+    tokens = batch["tokens"]
+    h = forward_hidden(params, tokens, qflags, cfg, quant)
+    return cm.chunked_lm_loss(h[:, :-1], tokens[:, 1:], params["embed"],
+                              real_vocab=cfg.vocab_size, ce_chunk=cfg.ce_chunk)
+
+
+# --------------------------------------------------------------------------- #
+# serving: O(1)-state decode
+# --------------------------------------------------------------------------- #
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int):
+    del seq_len  # state size is sequence-independent (that's the point)
+    L, H, P, N = cfg.n_layers, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    w, di = cfg.conv_width, cfg.d_inner
+    return {
+        "ssm": jax.ShapeDtypeStruct((L, batch, H, P, N), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((L, batch, w - 1, di),
+                                     jnp.dtype(cfg.compute_dtype)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    return {"ssm": ("layers", "batch", "heads", None, "state"),
+            "conv": ("layers", "batch", None, "mlp"),
+            "pos": None}
+
+
+def prefill(params, batch, cfg: ModelConfig, quant: QuantConfig,
+            cache_len=None):
+    """Run the prompt, produce last-token logits + recurrent state."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    di, H, P, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    qflags = jnp.zeros((cfg.n_layers,), jnp.float32)
+
+    def body(carry, xs):
+        blk, flag, lidx = xs
+        seed = lidx.astype(jnp.uint32) * jnp.uint32(97)
+        qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+        h = cm.rmsnorm(carry, blk["norm"]).astype(cd)
+        zxbcdt = qp("bsd,de->bse", h, blk["in_proj"].astype(cd), seed=seed)
+        z = zxbcdt[..., :di]
+        xs_ = zxbcdt[..., di:2 * di]
+        Bc = zxbcdt[..., 2 * di:2 * di + N].astype(jnp.float32)
+        Cc = zxbcdt[..., 2 * di + N:2 * di + 2 * N].astype(jnp.float32)
+        dt = jax.nn.softplus(
+            zxbcdt[..., 2 * di + 2 * N:].astype(jnp.float32)
+            + blk["dt_bias"][None, None, :])
+        xs_, conv_state = _causal_conv(xs_, blk["conv_w"], blk["conv_b"])
+        A = -jnp.exp(blk["A_log"])
+        xh = xs_.reshape(B, S, H, P)
+        y = ssd_chunked(xh, dt, A, Bc, Cc, cfg.ssm_chunk, flag, seed, quant)
+        # final ssm state: recompute from full sequence decays
+        dA = dt * A[None, None, :]
+        dA_cum_total = jnp.cumsum(dA, axis=1)
+        decay = jnp.exp(dA_cum_total[:, -1:, :] - dA_cum_total)  # (B,S,H)
+        xdt = xh * dt[..., None]
+        final_state = jnp.einsum("bsn,bsh,bshp->bhpn",
+                                 Bc, decay, xdt.astype(jnp.float32))
+        y = y + xh.astype(jnp.float32) * blk["D"][None, None, :, None]
+        y = cm.rmsnorm(y.reshape(B, S, di).astype(cd) * jax.nn.silu(z),
+                       blk["out_norm"])
+        out = qp("bse,ed->bsd", y.astype(cd), blk["out_proj"].astype(cd),
+                 seed=seed + 1)
+        return carry + out, (final_state, conv_state)
+
+    x, (ssm_states, conv_states) = jax.lax.scan(
+        body, x, (params["blocks"], qflags, jnp.arange(cfg.n_layers)))
+    h_last = cm.rmsnorm(x[:, -1], params["final_norm"]).astype(jnp.float32)
+    logits = jnp.einsum("bd,vd->bv", h_last,
+                        params["embed"].astype(jnp.float32))
+    cache = {"ssm": ssm_states, "conv": conv_states,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = token.shape[0]
+    di, H, P, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W = cfg.conv_width
+    x = jnp.take(params["embed"], token, axis=0).astype(cd)
+
+    def body(carry, xs):
+        blk, ssm, conv = xs                        # ssm (B,H,P,N); conv (B,W-1,di)
+        h = cm.rmsnorm(carry, blk["norm"]).astype(cd)
+        zxbcdt = jnp.einsum("bd,de->be", h, blk["in_proj"].astype(cd))
+        z = zxbcdt[..., :di]
+        xs_ = zxbcdt[..., di:2 * di]
+        Bc = zxbcdt[..., 2 * di:2 * di + N].astype(jnp.float32)
+        Cc = zxbcdt[..., 2 * di + N:2 * di + 2 * N].astype(jnp.float32)
+        dt = jax.nn.softplus(zxbcdt[..., 2 * di + 2 * N:].astype(jnp.float32)
+                             + blk["dt_bias"][None, :])
+        # conv ring update
+        xw = jnp.concatenate([conv.astype(cd), xs_[:, None, :]], axis=1)  # (B,W,di)
+        y_conv = jnp.einsum("bwd,wd->bd", xw, blk["conv_w"].astype(cd))
+        xs_ = jax.nn.silu(y_conv + blk["conv_b"][None, :])
+        new_conv = xw[:, 1:]
+        # state update
+        A = -jnp.exp(blk["A_log"])
+        dA = jnp.exp(dt * A[None, :])                              # (B,H)
+        xh = xs_.reshape(B, H, P).astype(jnp.float32)
+        new_ssm = (ssm * dA[:, :, None, None]
+                   + jnp.einsum("bhp,bn,bh->bhpn", xh, Bc, dt))
+        y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cc)
+        y = y + xh * blk["D"][None, :, None]
+        y = cm.rmsnorm(y.reshape(B, di).astype(cd) * jax.nn.silu(z),
+                       blk["out_norm"])
+        out = jnp.einsum("be,ed->bd", y.astype(cd), blk["out_proj"].astype(cd))
+        return carry + out, (new_ssm, new_conv)
+
+    x, (ssm_states, conv_states) = jax.lax.scan(
+        body, x, (params["blocks"], cache["ssm"], cache["conv"]))
+    h_last = cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32)
+    logits = jnp.einsum("bd,vd->bv", h_last,
+                        params["embed"].astype(jnp.float32))
+    return logits, {"ssm": ssm_states, "conv": conv_states,
+                    "pos": cache["pos"] + 1}
+
+
+@register_family("ssm")
+def build_ssm(cfg: ModelConfig, quant: QuantConfig) -> Model:
+    from repro.models.transformer import _dense_batch_spec, _dense_batch_axes
+    return Model(
+        config=cfg, quant=quant,
+        init=functools.partial(init_params, cfg=cfg),
+        param_axes=lambda: param_axes(cfg),
+        loss_fn=functools.partial(lm_loss, cfg=cfg, quant=quant),
+        batch_spec=_dense_batch_spec(cfg),
+        batch_axes=_dense_batch_axes(cfg),
+        prefill=functools.partial(prefill, cfg=cfg, quant=quant),
+        decode_step=functools.partial(decode_step, cfg=cfg, quant=quant),
+        cache_spec=functools.partial(cache_spec, cfg),
+        cache_axes=lambda: cache_axes(cfg),
+    )

@@ -1,0 +1,304 @@
+"""Mixture-of-Experts LM (kimi-k2 / arctic families).
+
+Transformer blocks with GQA attention (shared with repro.models.transformer)
+and a top-k routed expert MLP.  Two dispatch implementations:
+
+* ``dense``   — every expert processes every token, outputs combined with the
+  (sparse) gate weights.  Exact reference; O(E) FLOPs — smoke tests only.
+* ``capacity`` — Switch-style capacity dispatch built from *scatter/gather*
+  (never one-hot einsums, whose dispatch FLOPs would dominate): per example,
+  position-in-expert comes from a cumulative sum over the (S, E) assignment
+  counts; tokens beyond capacity overflow into a sacrificial slot that is
+  sliced away.  Expert GEMMs are (E, C, d) x (E, d, f) batched matmuls so
+  HLO FLOPs equal the *active* compute (6·N_active·D roofline accounting),
+  and the expert dim shards over the ``model`` mesh axis (EP).
+
+Arctic additionally has a dense residual MLP alongside the MoE FFN.
+DPQuant applicability: expert GEMMs + attention GEMMs quantize under the
+block's policy flag; the router stays fp32 (tiny + numerically sensitive).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.registry import Model, register_family
+from repro.parallel.axes import logical_constraint as lc
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def init_moe_blocks(key, cfg: ModelConfig):
+    L, d, E, f = cfg.n_layers, cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    pdt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 6)
+    blocks = tfm.init_block_stack(keys[0], cfg, L)
+    # replace the dense MLP with router + experts (keep attn params)
+    for k in ("wi_gate", "wi_up", "wo_mlp"):
+        del blocks[k]
+    blocks["router"] = cm.dense_init(keys[1], (L, d, E), d, jnp.float32)
+    blocks["e_gate"] = cm.dense_init(keys[2], (L, E, d, f), d, pdt)
+    blocks["e_up"] = cm.dense_init(keys[3], (L, E, d, f), d, pdt)
+    blocks["e_down"] = cm.dense_init(keys[4], (L, E, f, d), f, pdt)
+    if cfg.dense_ff_residual:
+        fr = cfg.dense_ff_residual
+        blocks["r_gate"] = cm.dense_init(keys[5], (L, d, fr), d, pdt)
+        blocks["r_up"] = cm.dense_init(jax.random.fold_in(keys[5], 1),
+                                       (L, d, fr), d, pdt)
+        blocks["r_down"] = cm.dense_init(jax.random.fold_in(keys[5], 2),
+                                         (L, fr, d), fr, pdt)
+    return blocks
+
+
+def moe_block_axes(cfg: ModelConfig):
+    axes = dict(tfm.BLOCK_AXES)
+    for k in ("wi_gate", "wi_up", "wo_mlp"):
+        del axes[k]
+    axes["router"] = ("layers", "embed", None)
+    axes["e_gate"] = ("layers", "experts", "embed", "expert_mlp")
+    axes["e_up"] = ("layers", "experts", "embed", "expert_mlp")
+    axes["e_down"] = ("layers", "experts", "expert_mlp", "embed")
+    if cfg.dense_ff_residual:
+        axes["r_gate"] = ("layers", "embed", "mlp")
+        axes["r_up"] = ("layers", "embed", "mlp")
+        axes["r_down"] = ("layers", "mlp", "embed")
+    return axes
+
+
+def init_params(key, cfg: ModelConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_blocks = jax.random.split(key)
+    return {
+        "embed": cm.embed_init(k_embed, (cfg.padded_vocab, cfg.d_model), pdt),
+        "final_norm": jnp.zeros((cfg.d_model,), pdt),
+        "blocks": init_moe_blocks(k_blocks, cfg),
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    return {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "blocks": moe_block_axes(cfg),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# dispatch
+# --------------------------------------------------------------------------- #
+def _route(h, router_w, cfg: ModelConfig):
+    """Router probs + top-k. h: (T, d) -> ids (T, k), probs (T, k)."""
+    logits = jnp.einsum("td,de->te", h.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_ids, top_p.astype(jnp.float32)
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    factor = cfg.moe_capacity_factor
+    return max(1, min(n_tokens,
+                      int(math.ceil(n_tokens * cfg.top_k * factor
+                                    / cfg.n_experts))))
+
+
+def moe_ffn_capacity(h, blk, flag, seed, cfg: ModelConfig, quant: QuantConfig):
+    """Capacity-based scatter/gather MoE for one example: h (S, d)."""
+    S, d = h.shape
+    E, f, k = cfg.n_experts, cfg.expert_d_ff, cfg.top_k
+    C = _capacity(cfg, S)
+    ids, gates = _route(h, blk["router"], cfg)              # (S, k)
+
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)        # (S, k, E)
+    counts = onehot.reshape(S * k, E)
+    pos_flat = jnp.cumsum(counts, axis=0) - counts          # (S*k, E)
+    pos = jnp.take_along_axis(
+        pos_flat.reshape(S, k, E), ids[..., None], axis=-1)[..., 0]  # (S, k)
+    overflow = pos >= C
+    pos_c = jnp.where(overflow, C, pos)                     # overflow slot C
+
+    # dispatch: (E, C+1, d) buffers; slot C collects overflow and is dropped
+    buf = jnp.zeros((E, C + 1, d), h.dtype)
+    flat_ids = ids.reshape(-1)
+    flat_pos = pos_c.reshape(-1)
+    xk = jnp.broadcast_to(h[:, None, :], (S, k, d)).reshape(S * k, d)
+    buf = buf.at[flat_ids, flat_pos].add(xk)
+    xe = buf[:, :C, :]                                      # (E, C, d)
+    xe = lc(xe, "experts", None, "embed")
+
+    # expert GEMMs (quantized under the block flag)
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = h.dtype
+    g = qp("ecd,edf->ecf", xe, blk["e_gate"].astype(cd), seed=seed + 10)
+    u = qp("ecd,edf->ecf", xe, blk["e_up"].astype(cd), seed=seed + 11)
+    a = jax.nn.silu(g) * u
+    a = lc(a, "experts", None, "expert_mlp")
+    ye = qp("ecf,efd->ecd", a, blk["e_down"].astype(cd), seed=seed + 12)
+
+    # combine: gather back, weight by gates, drop overflow
+    ye_pad = jnp.concatenate([ye, jnp.zeros((E, 1, d), ye.dtype)], axis=1)
+    yk = ye_pad[flat_ids, flat_pos].reshape(S, k, d)
+    w = jnp.where(overflow, 0.0, gates).astype(ye.dtype)
+    return jnp.einsum("skd,sk->sd", yk, w)
+
+
+def moe_ffn_dense(h, blk, flag, seed, cfg: ModelConfig, quant: QuantConfig):
+    """Reference: all experts compute all tokens. h: (S, d)."""
+    ids, gates = _route(h, blk["router"], cfg)              # (S, k)
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = h.dtype
+    g = qp("sd,edf->esf", h, blk["e_gate"].astype(cd), seed=seed + 10)
+    u = qp("sd,edf->esf", h, blk["e_up"].astype(cd), seed=seed + 11)
+    a = jax.nn.silu(g) * u
+    y = qp("esf,efd->esd", a, blk["e_down"].astype(cd), seed=seed + 12)
+    # sparse combine
+    E = cfg.n_experts
+    comb = jnp.zeros((h.shape[0], E), jnp.float32)
+    comb = comb.at[jnp.arange(h.shape[0])[:, None], ids].add(gates)
+    return jnp.einsum("esd,se->sd", y, comb.astype(y.dtype))
+
+
+def moe_block(x, blk, flag, lidx, positions, cfg: ModelConfig,
+              quant: QuantConfig):
+    seed = lidx.astype(jnp.uint32) * jnp.uint32(97)
+    attn_out, _ = tfm.attention_block(x, blk, flag, seed, positions, cfg, quant)
+    x = lc(x + attn_out, "batch", "seq", "embed")
+    h = cm.rmsnorm(x, blk["mlp_norm"]).astype(x.dtype)
+    ffn = moe_ffn_capacity if cfg.moe_impl == "capacity" else moe_ffn_dense
+    y = jax.vmap(lambda hh: ffn(hh, blk, flag, seed, cfg, quant))(h)
+    if cfg.dense_ff_residual:
+        qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+        cd = x.dtype
+        g = qp("bsd,df->bsf", h, blk["r_gate"].astype(cd), seed=seed + 20)
+        u = qp("bsd,df->bsf", h, blk["r_up"].astype(cd), seed=seed + 21)
+        y = y + qp("bsf,fd->bsd", jax.nn.silu(g) * u,
+                   blk["r_down"].astype(cd), seed=seed + 22)
+    return lc(x + y, "batch", "seq", "embed")
+
+
+def lm_loss(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig):
+    del rng
+    tokens = batch["tokens"]
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = lc(x, "batch", "seq", "embed")
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    x = tfm.run_block_stack(x, params["blocks"], qflags, positions, cfg,
+                            quant, block_fn=moe_block)
+    h = cm.rmsnorm(x, params["final_norm"])
+    return cm.chunked_lm_loss(h[:, :-1], tokens[:, 1:], params["embed"],
+                              real_vocab=cfg.vocab_size, ce_chunk=cfg.ce_chunk)
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def prefill(params, batch, cfg: ModelConfig, quant: QuantConfig,
+            cache_len=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = lc(x, "batch", "seq", "embed")
+    positions = jnp.arange(S)[None, :]
+    qflags = jnp.zeros((cfg.n_layers,), jnp.float32)
+
+    def body(carry, xs):
+        blk, flag, lidx = xs
+        seed = lidx.astype(jnp.uint32) * jnp.uint32(97)
+        attn_out, (k, v) = tfm.attention_block(carry, blk, flag, seed,
+                                               positions, cfg, quant)
+        x2 = lc(carry + attn_out, "batch", "seq", "embed")
+        h = cm.rmsnorm(x2, blk["mlp_norm"]).astype(x2.dtype)
+        ffn = (moe_ffn_capacity if cfg.moe_impl == "capacity"
+               else moe_ffn_dense)
+        y = jax.vmap(lambda hh: ffn(hh, blk, flag, seed, cfg, quant))(h)
+        if cfg.dense_ff_residual:
+            g = jnp.einsum("bsd,df->bsf", h, blk["r_gate"].astype(x2.dtype))
+            u = jnp.einsum("bsd,df->bsf", h, blk["r_up"].astype(x2.dtype))
+            y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                               blk["r_down"].astype(x2.dtype))
+        x2 = lc(x2 + y, "batch", "seq", "embed")
+        kc = jnp.transpose(k, (0, 2, 1, 3))
+        vc = jnp.transpose(v, (0, 2, 1, 3))
+        if cache_len > S:
+            pad = [(0, 0), (0, 0), (0, cache_len - S), (0, 0)]
+            kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+        return x2, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], qflags, jnp.arange(cfg.n_layers)))
+    h_last = cm.rmsnorm(x[:, -1], params["final_norm"]).astype(jnp.float32)
+    logits = jnp.einsum("bd,vd->bv", h_last,
+                        params["embed"].astype(jnp.float32))
+    return logits, {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token, axis=0).astype(cd)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    zero_flag = jnp.float32(0.0)
+
+    def body(carry, xs):
+        blk, kc, vc, lidx = xs
+        h = cm.rmsnorm(carry, blk["attn_norm"]).astype(cd)
+        q = jnp.einsum("bd,dhk->bhk", h, blk["wq"].astype(cd))
+        k = jnp.einsum("bd,dhk->bhk", h, blk["wk"].astype(cd))
+        v = jnp.einsum("bd,dhk->bhk", h, blk["wv"].astype(cd))
+        q = cm.rope(q[:, None], positions, cfg.rope_theta)[:, 0]
+        k = cm.rope(k[:, None], positions, cfg.rope_theta)[:, 0]
+        kc = jax.lax.dynamic_update_slice(
+            kc, k[:, :, None, :].astype(kc.dtype), (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v[:, :, None, :].astype(vc.dtype), (0, 0, pos, 0))
+        ctx = tfm.decode_attend(q, kc, vc, pos, cfg)
+        x2 = carry + jnp.einsum("bhk,hkd->bd", ctx.astype(cd),
+                                blk["wo"].astype(cd))
+        h2 = cm.rmsnorm(x2, blk["mlp_norm"]).astype(cd)
+        ffn = (moe_ffn_capacity if cfg.moe_impl == "capacity"
+               else moe_ffn_dense)
+        seed = lidx.astype(jnp.uint32) * jnp.uint32(97)
+        y = jax.vmap(lambda hh: ffn(hh[None], blk, zero_flag, seed, cfg,
+                                    quant)[0])(h2)
+        if cfg.dense_ff_residual:
+            g = jnp.einsum("bd,df->bf", h2, blk["r_gate"].astype(cd))
+            u = jnp.einsum("bd,df->bf", h2, blk["r_up"].astype(cd))
+            y = y + jnp.einsum("bf,fd->bd", jax.nn.silu(g) * u,
+                               blk["r_down"].astype(cd))
+        return x2 + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"],
+                  jnp.arange(cfg.n_layers)))
+    h_last = cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32)
+    logits = jnp.einsum("bd,vd->bv", h_last,
+                        params["embed"].astype(jnp.float32))
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}
+
+
+@register_family("moe_lm")
+def build_moe_lm(cfg: ModelConfig, quant: QuantConfig) -> Model:
+    return Model(
+        config=cfg, quant=quant,
+        init=functools.partial(init_params, cfg=cfg),
+        param_axes=lambda: param_axes(cfg),
+        loss_fn=functools.partial(lm_loss, cfg=cfg, quant=quant),
+        batch_spec=tfm._dense_batch_spec(cfg),
+        batch_axes=tfm._dense_batch_axes(cfg),
+        prefill=functools.partial(prefill, cfg=cfg, quant=quant),
+        decode_step=functools.partial(decode_step, cfg=cfg, quant=quant),
+        cache_spec=functools.partial(tfm.kv_cache_spec, cfg),
+        cache_axes=lambda: tfm.kv_cache_axes(cfg),
+    )

@@ -1,0 +1,57 @@
+"""Model abstraction + registry.
+
+A ``Model`` bundles pure functions; params/caches are plain pytrees. Logical
+axis pytrees mirror the param/cache structure and feed the partitioner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+from repro.config import ModelConfig, QuantConfig
+
+
+@dataclasses.dataclass
+class Model:
+    config: ModelConfig
+    quant: QuantConfig
+    # training
+    init: Callable                    # key -> params
+    param_axes: Callable              # () -> axes pytree (matches params)
+    loss_fn: Callable                 # (params, batch, rng, qflags) -> scalar
+    batch_spec: Callable              # (batch, seq) -> {name: ShapeDtypeStruct}
+    batch_axes: Callable              # () -> {name: logical axes tuple}
+    # serving (decoder families only)
+    prefill: Optional[Callable] = None       # (params, batch) -> (logits, cache)
+    decode_step: Optional[Callable] = None   # (params, cache, token) -> (logits, cache)
+    cache_spec: Optional[Callable] = None    # (batch, seq) -> cache ShapeDtypeStructs
+    cache_axes: Optional[Callable] = None
+
+    @property
+    def n_policy_layers(self) -> int:
+        return self.config.policy_len()
+
+
+_BUILDERS: Dict[str, Callable[[ModelConfig, QuantConfig], Model]] = {}
+
+
+def register_family(name: str):
+    def deco(fn):
+        _BUILDERS[name] = fn
+        return fn
+    return deco
+
+
+def build_model(config: ModelConfig, quant: Optional[QuantConfig] = None) -> Model:
+    quant = quant or QuantConfig()
+    # import model modules lazily so registration happens on demand
+    import importlib
+    for mod in ("transformer", "moe", "mamba2", "griffin", "encdec", "vlm",
+                "resnet", "densenet", "bert"):
+        try:
+            importlib.import_module(f"repro.models.{mod}")
+        except ModuleNotFoundError:  # pragma: no cover - during bring-up
+            pass
+    if config.family not in _BUILDERS:
+        raise ValueError(f"unknown model family: {config.family}")
+    return _BUILDERS[config.family](config, quant)

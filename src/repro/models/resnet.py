@@ -1,0 +1,199 @@
+"""ResNet-18/50 (the paper's primary CNNs), DP-compatible (GroupNorm).
+
+CIFAR/GTSRB-style stem (3x3, stride 1) for 32x32 synthetic inputs.
+BatchNorm is replaced with GroupNorm — per-example DP gradients forbid
+cross-example statistics (Opacus imposes the same conversion).
+
+DPQuant policy granularity: the stem + every residual block is one
+schedulable "layer" (matches the paper's per-layer conv quantization);
+``qconv2d`` gates every conv GEMM (fwd/dgrad/wgrad) under the block's flag.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantConfig
+from repro.models import common as cm
+from repro.models.registry import Model, register_family
+from repro.quant.fake_quant import qconv2d
+
+
+def _conv_init(key, shape):  # HWIO
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def _gn_params(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _is_bottleneck(cfg: ModelConfig) -> bool:
+    return sum(cfg.resnet_blocks) > 8          # resnet50 (3,4,6,3)
+
+
+def init_params(key, cfg: ModelConfig):
+    blocks_per_stage = cfg.resnet_blocks
+    bottleneck = _is_bottleneck(cfg)
+    widths = [64, 128, 256, 512]
+    expansion = 4 if bottleneck else 1
+    params = {"stem": {"conv": _conv_init(key, (3, 3, cfg.in_channels, 64)),
+                       "gn": _gn_params(64)}}
+    keys = jax.random.split(key, 64)
+    ki = 1
+    in_c = 64
+    stages = []
+    for si, (n, w) in enumerate(zip(blocks_per_stage, widths)):
+        stage = []
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            out_c = w * expansion
+            blk = {}
+            if bottleneck:
+                blk["conv1"] = _conv_init(keys[ki], (1, 1, in_c, w)); ki += 1
+                blk["gn1"] = _gn_params(w)
+                blk["conv2"] = _conv_init(keys[ki], (3, 3, w, w)); ki += 1
+                blk["gn2"] = _gn_params(w)
+                blk["conv3"] = _conv_init(keys[ki], (1, 1, w, out_c)); ki += 1
+                blk["gn3"] = _gn_params(out_c)
+            else:
+                blk["conv1"] = _conv_init(keys[ki], (3, 3, in_c, w)); ki += 1
+                blk["gn1"] = _gn_params(w)
+                blk["conv2"] = _conv_init(keys[ki], (3, 3, w, out_c)); ki += 1
+                blk["gn2"] = _gn_params(out_c)
+            if stride != 1 or in_c != out_c:
+                blk["proj"] = _conv_init(keys[ki], (1, 1, in_c, out_c)); ki += 1
+                blk["proj_gn"] = _gn_params(out_c)
+            blk["stride"] = stride  # static int, stored as aux (removed below)
+            stage.append(blk)
+            in_c = out_c
+            if ki >= 60:
+                keys = jax.random.split(keys[-1], 64)
+                ki = 0
+        stages.append(stage)
+    # strides are static structure; strip them from the param pytree
+    strides = [[b.pop("stride") for b in st] for st in stages]
+    params["stages"] = stages
+    params["head"] = {
+        "w": jax.random.normal(keys[ki], (in_c, cfg.num_classes),
+                               jnp.float32) / math.sqrt(in_c),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+    return params
+
+
+def _static_strides(cfg: ModelConfig):
+    return [[(2 if (si > 0 and bi == 0) else 1) for bi in range(n)]
+            for si, n in enumerate(cfg.resnet_blocks)]
+
+
+def param_axes(cfg: ModelConfig):
+    def conv_ax():
+        return (None, None, None, "mlp")
+    bottleneck = _is_bottleneck(cfg)
+
+    def blk_axes(has_proj):
+        ax = {"conv1": conv_ax(), "gn1": {"scale": (None,), "bias": (None,)},
+              "conv2": conv_ax(), "gn2": {"scale": (None,), "bias": (None,)}}
+        if bottleneck:
+            ax["conv3"] = conv_ax()
+            ax["gn3"] = {"scale": (None,), "bias": (None,)}
+        if has_proj:
+            ax["proj"] = conv_ax()
+            ax["proj_gn"] = {"scale": (None,), "bias": (None,)}
+        return ax
+
+    widths = [64, 128, 256, 512]
+    expansion = 4 if bottleneck else 1
+    stages = []
+    in_c = 64
+    for si, (n, w) in enumerate(zip(cfg.resnet_blocks, widths)):
+        st = []
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            out_c = w * expansion
+            st.append(blk_axes(stride != 1 or in_c != out_c))
+            in_c = out_c
+        stages.append(st)
+    return {"stem": {"conv": conv_ax(),
+                     "gn": {"scale": (None,), "bias": (None,)}},
+            "stages": stages,
+            "head": {"w": (None, None), "b": (None,)}}
+
+
+def forward(params, image, qflags, cfg: ModelConfig, quant: QuantConfig):
+    bottleneck = _is_bottleneck(cfg)
+    strides = _static_strides(cfg)
+    li = 0  # policy layer index
+
+    def qc(x, w, flag, seed, stride=1):
+        return qconv2d(x, w, seed=jnp.uint32(seed), flag=flag,
+                       strides=(stride, stride), padding="SAME",
+                       fmt=quant.fmt, q_fwd=quant.quantize_fwd,
+                       q_dgrad=quant.quantize_dgrad,
+                       q_wgrad=quant.quantize_wgrad)
+
+    x = qc(image, params["stem"]["conv"], qflags[li], 11 * li)
+    x = cm.groupnorm(x, params["stem"]["gn"]["scale"],
+                     params["stem"]["gn"]["bias"])
+    x = jax.nn.relu(x)
+    li += 1
+    for si, stage in enumerate(params["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = strides[si][bi]
+            flag = qflags[li]
+            sd = 11 * li
+            shortcut = x
+            if bottleneck:
+                h = jax.nn.relu(cm.groupnorm(
+                    qc(x, blk["conv1"], flag, sd),
+                    blk["gn1"]["scale"], blk["gn1"]["bias"]))
+                h = jax.nn.relu(cm.groupnorm(
+                    qc(h, blk["conv2"], flag, sd + 1, stride),
+                    blk["gn2"]["scale"], blk["gn2"]["bias"]))
+                h = cm.groupnorm(qc(h, blk["conv3"], flag, sd + 2),
+                                 blk["gn3"]["scale"], blk["gn3"]["bias"])
+            else:
+                h = jax.nn.relu(cm.groupnorm(
+                    qc(x, blk["conv1"], flag, sd, stride),
+                    blk["gn1"]["scale"], blk["gn1"]["bias"]))
+                h = cm.groupnorm(qc(h, blk["conv2"], flag, sd + 1),
+                                 blk["gn2"]["scale"], blk["gn2"]["bias"])
+            if "proj" in blk:
+                shortcut = cm.groupnorm(
+                    qc(x, blk["proj"], flag, sd + 3, stride),
+                    blk["proj_gn"]["scale"], blk["proj_gn"]["bias"])
+            x = jax.nn.relu(h + shortcut)
+            li += 1
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig):
+    del rng
+    logits = forward(params, batch["image"], qflags, cfg, quant)
+    return cm.softmax_xent(logits, batch["label"])
+
+
+@register_family("resnet")
+def build_resnet(cfg: ModelConfig, quant: QuantConfig) -> Model:
+    def batch_spec(batch: int, seq: int = 0):
+        s = cfg.image_size
+        return {"image": jax.ShapeDtypeStruct((batch, s, s, cfg.in_channels),
+                                              jnp.float32),
+                "label": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+    def batch_axes():
+        return {"image": ("batch", None, None, None), "label": ("batch",)}
+
+    return Model(
+        config=cfg, quant=quant,
+        init=functools.partial(init_params, cfg=cfg),
+        param_axes=lambda: param_axes(cfg),
+        loss_fn=functools.partial(loss_fn, cfg=cfg, quant=quant),
+        batch_spec=batch_spec,
+        batch_axes=batch_axes,
+    )

@@ -1,0 +1,357 @@
+"""Dense decoder-only GQA transformer (gemma / yi / stablelm families).
+
+Structure: RMSNorm -> GQA attention (RoPE) -> residual -> RMSNorm -> gated
+MLP (GeGLU/SwiGLU) -> residual; tied embeddings by default; layers executed
+with ``lax.scan``; DPQuant per-layer flags gate every GEMM through
+``repro.quant.fake_quant.qeinsum`` (forward + dgrad + wgrad quantization).
+
+Sharding-driven padding (DESIGN.md §5): query heads are padded up to
+``pad_heads_to`` (extra heads zero-initialized); the vocab is padded to
+``pad_vocab_to`` (padded logits masked in the loss).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantConfig
+from repro.models import common as cm
+from repro.models.registry import Model, register_family
+from repro.parallel.axes import logical_constraint as lc
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def init_block_stack(key, cfg: ModelConfig, n_layers: int):
+    d, hp, kv, hd, f = (cfg.d_model, cfg.padded_heads, cfg.n_kv_heads,
+                        cfg.head_dim, cfg.d_ff)
+    pdt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    L = n_layers
+
+    def dinit(k, shape, fan_in):
+        return cm.dense_init(k, shape, fan_in, pdt)
+
+    wq = dinit(keys[0], (L, d, hp, hd), d)
+    if hp != cfg.n_heads:
+        # zero the padded query heads so padding is semantics-preserving
+        head_mask = (jnp.arange(hp) < cfg.n_heads).astype(pdt)
+        wq = wq * head_mask[None, None, :, None]
+    blocks = {
+        "attn_norm": jnp.zeros((L, d), pdt),
+        "wq": wq,
+        "wk": dinit(keys[1], (L, d, kv, hd), d),
+        "wv": dinit(keys[2], (L, d, kv, hd), d),
+        "wo": dinit(keys[3], (L, hp, hd, d), hp * hd),
+        "mlp_norm": jnp.zeros((L, d), pdt),
+        "wi_gate": dinit(keys[4], (L, d, f), d),
+        "wi_up": dinit(keys[5], (L, d, f), d),
+        "wo_mlp": dinit(keys[6], (L, f, d), f),
+    }
+    return blocks
+
+
+BLOCK_AXES = {
+    "attn_norm": ("layers", "embed"),
+    "wq": ("layers", "embed", "heads", "head_dim"),
+    "wk": ("layers", "embed", "kv_heads", "head_dim"),
+    "wv": ("layers", "embed", "kv_heads", "head_dim"),
+    "wo": ("layers", "heads", "head_dim", "embed"),
+    "mlp_norm": ("layers", "embed"),
+    "wi_gate": ("layers", "embed", "mlp"),
+    "wi_up": ("layers", "embed", "mlp"),
+    "wo_mlp": ("layers", "mlp", "embed"),
+}
+
+
+def init_params(key, cfg: ModelConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": cm.embed_init(k_embed, (cfg.padded_vocab, cfg.d_model), pdt),
+        "final_norm": jnp.zeros((cfg.d_model,), pdt),
+        "blocks": init_block_stack(k_blocks, cfg, cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(
+            k_head, (cfg.d_model, cfg.padded_vocab), cfg.d_model, pdt)
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    axes = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "blocks": dict(BLOCK_AXES),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    return axes
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+def _activation(gate, up, kind: str):
+    if kind == "geglu":
+        return jax.nn.gelu(gate) * up
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "gelu":
+        return jax.nn.gelu(gate)
+    if kind == "relu":
+        return jax.nn.relu(gate)
+    raise ValueError(kind)
+
+
+def attention_block(x, blk, flag, seed, positions, cfg: ModelConfig,
+                    quant: QuantConfig):
+    """Pre-norm GQA attention with RoPE; returns the residual branch."""
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    h = cm.rmsnorm(x, blk["attn_norm"])
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = h.astype(cd)
+    q = qp("bsd,dhk->bshk", h, blk["wq"].astype(cd), seed=seed)
+    k = qp("bsd,dhk->bshk", h, blk["wk"].astype(cd), seed=seed + 1)
+    v = qp("bsd,dhk->bshk", h, blk["wv"].astype(cd), seed=seed + 2)
+    q = lc(q, "batch", "seq", "heads", "head_dim")
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    n_rep = cfg.padded_heads // cfg.n_kv_heads
+    kr, vr = cm.repeat_kv(k, n_rep), cm.repeat_kv(v, n_rep)
+    out = cm.chunked_causal_attention(
+        q, kr, vr, chunk_q=cfg.attn_chunk_q, causal=True,
+        scale=1.0 / math.sqrt(cfg.head_dim))
+    out = lc(out, "batch", "seq", "heads", "head_dim")
+    res = qp("bshk,hkd->bsd", out, blk["wo"].astype(cd), seed=seed + 3)
+    return res, (k, v)  # compact (pre-repeat) KV for cache reuse
+
+
+def mlp_block(x, blk, flag, seed, cfg: ModelConfig, quant: QuantConfig):
+    qp = functools.partial(cm.qproj, quant_cfg=quant, flag=flag)
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = cm.rmsnorm(x, blk["mlp_norm"]).astype(cd)
+    gate = qp("bsd,df->bsf", h, blk["wi_gate"].astype(cd), seed=seed + 4)
+    up = qp("bsd,df->bsf", h, blk["wi_up"].astype(cd), seed=seed + 5)
+    act = _activation(gate, up, cfg.mlp_activation)
+    act = lc(act, "batch", "seq", "mlp")
+    return qp("bsf,fd->bsd", act, blk["wo_mlp"].astype(cd), seed=seed + 6)
+
+
+def transformer_block(x, blk, flag, lidx, positions, cfg, quant):
+    seed = lidx.astype(jnp.uint32) * jnp.uint32(97)
+    attn_out, _ = attention_block(x, blk, flag, seed, positions, cfg, quant)
+    x = lc(x + attn_out, "batch", "seq", "embed")
+    x = lc(x + mlp_block(x, blk, flag, seed, cfg, quant),
+           "batch", "seq", "embed")
+    return x
+
+
+def run_block_stack(x, blocks, qflags, positions, cfg: ModelConfig,
+                    quant: QuantConfig, block_fn=transformer_block):
+    L = jax.tree_util.tree_leaves(blocks)[0].shape[0]
+
+    def apply_block(carry, blk, flag, lidx):
+        return block_fn(carry, blk, flag, lidx, positions, cfg, quant)
+
+    if cfg.remat:
+        apply_block = jax.checkpoint(apply_block)
+
+    def body(carry, xs):
+        blk, flag, lidx = xs
+        return apply_block(carry, blk, flag, lidx), None
+
+    x, _ = jax.lax.scan(body, x, (blocks, qflags, jnp.arange(L)))
+    return x
+
+
+def forward_hidden(params, tokens, qflags, cfg: ModelConfig,
+                   quant: QuantConfig, inputs_embeds: Optional[jax.Array] = None):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    if cfg.family == "dense_lm":
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)  # gemma-style scaling
+    if inputs_embeds is not None:
+        nv = inputs_embeds.shape[1]
+        x = jnp.concatenate([inputs_embeds.astype(cd), x[:, nv:]], axis=1)
+    x = lc(x, "batch", "seq", "embed")
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    x = run_block_stack(x, params["blocks"], qflags, positions, cfg, quant)
+    return cm.rmsnorm(x, params["final_norm"])
+
+
+def lm_loss(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig,
+            loss_mask_prefix: int = 0):
+    del rng
+    tokens = batch["tokens"]
+    h = forward_hidden(params, tokens, qflags, cfg, quant,
+                       inputs_embeds=batch.get("vision_embeds"))
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+    mask = None
+    if loss_mask_prefix:
+        mask = (jnp.arange(tokens.shape[1] - 1)[None, :]
+                >= loss_mask_prefix).astype(jnp.float32) \
+            * jnp.ones((tokens.shape[0], 1), jnp.float32)
+    return cm.chunked_lm_loss(h[:, :-1], tokens[:, 1:], head,
+                              real_vocab=cfg.vocab_size,
+                              ce_chunk=cfg.ce_chunk, mask=mask)
+
+
+# --------------------------------------------------------------------------- #
+# serving: prefill + decode with KV cache
+# --------------------------------------------------------------------------- #
+def kv_cache_spec(cfg: ModelConfig, batch: int, seq_len: int):
+    cd = jnp.dtype(cfg.compute_dtype)
+    L, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, kv, seq_len, hd), cd),
+        "v": jax.ShapeDtypeStruct((L, batch, kv, seq_len, hd), cd),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def kv_cache_axes(cfg: ModelConfig):
+    return {
+        "k": ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+        "v": ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+        "pos": None,
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, quant: QuantConfig,
+            cache_len: Optional[int] = None):
+    """Run the full prompt; return (last-token logits, filled KV cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    if cfg.family == "dense_lm":
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    ve = batch.get("vision_embeds")
+    if ve is not None:
+        x = jnp.concatenate([ve.astype(cd), x[:, ve.shape[1]:]], axis=1)
+    x = lc(x, "batch", "seq", "embed")
+    positions = jnp.arange(S)[None, :]
+    qflags = jnp.zeros((cfg.n_layers,), jnp.float32)  # serving: no fake-quant
+
+    def body(carry, xs):
+        blk, flag, lidx = xs
+        seed = lidx.astype(jnp.uint32) * jnp.uint32(97)
+        attn_out, (k, v) = attention_block(carry, blk, flag, seed, positions,
+                                           cfg, quant)
+        x2 = lc(carry + attn_out, "batch", "seq", "embed")
+        x2 = lc(x2 + mlp_block(x2, blk, flag, seed, cfg, quant),
+                "batch", "seq", "embed")
+        kc = jnp.transpose(k, (0, 2, 1, 3))  # (B, KV, S, hd)
+        vc = jnp.transpose(v, (0, 2, 1, 3))
+        if cache_len > S:
+            pad = [(0, 0), (0, 0), (0, cache_len - S), (0, 0)]
+            kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+        return x2, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], qflags, jnp.arange(cfg.n_layers)))
+    h_last = cm.rmsnorm(x[:, -1], params["final_norm"]).astype(jnp.float32)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+    logits = jnp.einsum("bd,vd->bv", h_last, head.astype(jnp.float32))
+    cache = {"k": lc(ks, "layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+             "v": lc(vs, "layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_attend(q, k_cache, v_cache, pos, cfg: ModelConfig):
+    """One-token GQA attention against a (B, KV, S, hd) cache."""
+    B, hp, hd = q.shape
+    kv = cfg.n_kv_heads
+    g = hp // kv
+    qg = q.reshape(B, kv, g, hd)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = (jnp.arange(k_cache.shape[2]) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgs,bksd->bkgd", probs.astype(v_cache.dtype), v_cache)
+    return ctx.reshape(B, hp, hd)
+
+
+def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
+    """Append one token; returns (logits, new cache)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token, axis=0).astype(cd)
+    if cfg.family == "dense_lm":
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(carry, xs):
+        blk, kc, vc, lidx = xs
+        h = cm.rmsnorm(carry, blk["attn_norm"]).astype(cd)
+        q = jnp.einsum("bd,dhk->bhk", h, blk["wq"].astype(cd))
+        k = jnp.einsum("bd,dhk->bhk", h, blk["wk"].astype(cd))
+        v = jnp.einsum("bd,dhk->bhk", h, blk["wv"].astype(cd))
+        q = cm.rope(q[:, None], positions, cfg.rope_theta)[:, 0]
+        k = cm.rope(k[:, None], positions, cfg.rope_theta)[:, 0]
+        # k, v: (B, KV, hd) -> write (B, KV, 1, hd) slab at sequence pos
+        kc = jax.lax.dynamic_update_slice(
+            kc, k[:, :, None, :].astype(kc.dtype), (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v[:, :, None, :].astype(vc.dtype), (0, 0, pos, 0))
+        ctx = decode_attend(q, kc, vc, pos, cfg)
+        attn_out = jnp.einsum("bhk,hkd->bd", ctx.astype(cd),
+                              blk["wo"].astype(cd))
+        x2 = carry + attn_out
+        h2 = cm.rmsnorm(x2, blk["mlp_norm"]).astype(cd)
+        gate = jnp.einsum("bd,df->bf", h2, blk["wi_gate"].astype(cd))
+        up = jnp.einsum("bd,df->bf", h2, blk["wi_up"].astype(cd))
+        act = _activation(gate, up, cfg.mlp_activation)
+        x2 = x2 + jnp.einsum("bf,fd->bd", act, blk["wo_mlp"].astype(cd))
+        return x2, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"],
+                  jnp.arange(cfg.n_layers)))
+    h_last = cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+    logits = jnp.einsum("bd,vd->bv", h_last, head.astype(jnp.float32))
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# registry glue
+# --------------------------------------------------------------------------- #
+def _dense_batch_spec(cfg: ModelConfig):
+    def spec(batch: int, seq: int):
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    return spec
+
+
+def _dense_batch_axes(cfg: ModelConfig):
+    def axes():
+        return {"tokens": ("batch", "seq")}
+    return axes
+
+
+@register_family("dense_lm")
+def build_dense_lm(cfg: ModelConfig, quant: QuantConfig) -> Model:
+    return Model(
+        config=cfg, quant=quant,
+        init=functools.partial(init_params, cfg=cfg),
+        param_axes=lambda: param_axes(cfg),
+        loss_fn=functools.partial(lm_loss, cfg=cfg, quant=quant),
+        batch_spec=_dense_batch_spec(cfg),
+        batch_axes=_dense_batch_axes(cfg),
+        prefill=functools.partial(prefill, cfg=cfg, quant=quant),
+        decode_step=functools.partial(decode_step, cfg=cfg, quant=quant),
+        cache_spec=functools.partial(kv_cache_spec, cfg),
+        cache_axes=lambda: kv_cache_axes(cfg),
+    )

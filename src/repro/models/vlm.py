@@ -1,0 +1,51 @@
+"""VLM backbone (internvl2-1b assignment): decoder LM + vision-embed stub.
+
+Per the assignment the InternViT frontend is a STUB — the batch carries
+precomputed patch embeddings ``vision_embeds (B, n_vision_tokens, d_model)``
+which replace the first ``n_vision_tokens`` positions of the token embedding
+sequence.  Loss is masked over the vision prefix.  Everything else reuses the
+dense GQA transformer (repro.models.transformer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantConfig
+from repro.models import transformer as tfm
+from repro.models.registry import Model, register_family
+
+
+@register_family("vlm")
+def build_vlm(cfg: ModelConfig, quant: QuantConfig) -> Model:
+    nv = cfg.n_vision_tokens
+
+    def loss_fn(params, batch, rng, qflags):
+        return tfm.lm_loss(params, batch, rng, qflags, cfg=cfg, quant=quant,
+                           loss_mask_prefix=nv)
+
+    def batch_spec(batch: int, seq: int):
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "vision_embeds": jax.ShapeDtypeStruct(
+                (batch, nv, cfg.d_model), jnp.dtype(cfg.compute_dtype)),
+        }
+
+    def batch_axes():
+        return {"tokens": ("batch", "seq"),
+                "vision_embeds": ("batch", None, "embed")}
+
+    return Model(
+        config=cfg, quant=quant,
+        init=functools.partial(tfm.init_params, cfg=cfg),
+        param_axes=lambda: tfm.param_axes(cfg),
+        loss_fn=loss_fn,
+        batch_spec=batch_spec,
+        batch_axes=batch_axes,
+        prefill=functools.partial(tfm.prefill, cfg=cfg, quant=quant),
+        decode_step=functools.partial(tfm.decode_step, cfg=cfg, quant=quant),
+        cache_spec=functools.partial(tfm.kv_cache_spec, cfg),
+        cache_axes=lambda: tfm.kv_cache_axes(cfg),
+    )

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (
+    Optimizer, sgd, momentum, adam, adamw, make_optimizer, apply_updates)
+from repro.optim.schedule import make_schedule
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw",
+           "make_optimizer", "apply_updates", "make_schedule"]

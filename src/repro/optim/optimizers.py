@@ -1,0 +1,98 @@
+"""Minimal pure-JAX optimizers (no optax offline).
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params, lr) -> (updates, state)``; apply with
+``apply_updates``. All states are pytrees -> checkpoint/shard transparently
+(optimizer moments inherit the parameter logical axes in the partitioner).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimConfig
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params, lr) -> (updates, state)
+    name: str = "opt"
+
+
+def apply_updates(params, updates):
+    return tmap(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        return tmap(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(mu: float = 0.9) -> Optimizer:
+    def init(params):
+        return tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        new_v = tmap(lambda v, g: mu * v + g, state, grads)
+        return tmap(lambda v: -lr * v, new_v), new_v
+
+    return Optimizer(init, update, "momentum")
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jax.Array
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, name: str = "adam") -> Optimizer:
+    def init(params):
+        z = lambda: tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(z(), z(), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        mu = tmap(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = tmap(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                  state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        return tmap(upd, mu, nu, params), AdamState(mu, nu, count)
+
+    return Optimizer(init, update, name)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return adam(b1, b2, eps, weight_decay, name="adamw")
+
+
+def make_optimizer(cfg: OptimConfig) -> Optimizer:
+    if cfg.name == "sgd":
+        return sgd() if cfg.momentum == 0.0 else momentum(cfg.momentum)
+    if cfg.name == "momentum":
+        return momentum(cfg.momentum or 0.9)
+    if cfg.name == "adam":
+        return adam(cfg.beta1, cfg.beta2, cfg.eps)
+    if cfg.name == "adamw":
+        return adamw(cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.name}")

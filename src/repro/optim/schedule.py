@@ -1,0 +1,26 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import OptimConfig
+
+
+def make_schedule(cfg: OptimConfig, total_steps: int):
+    base = cfg.lr
+    warm = max(cfg.warmup_steps, 0)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        lr = jnp.asarray(base, jnp.float32)
+        if warm > 0:
+            lr = lr * jnp.minimum(1.0, (step + 1) / warm)
+        if cfg.schedule == "cosine":
+            frac = jnp.clip((step - warm) / max(total_steps - warm, 1), 0, 1)
+            lr = lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        elif cfg.schedule == "linear":
+            frac = jnp.clip((step - warm) / max(total_steps - warm, 1), 0, 1)
+            lr = lr * (1 - frac)
+        return lr
+
+    return sched

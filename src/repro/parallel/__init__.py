@@ -1,0 +1,8 @@
+from repro.parallel.axes import logical_constraint, partitioning_context
+from repro.parallel.partitioner import (
+    DEFAULT_RULES, assign_spec, merge_rules, named_sharding, tree_shardings)
+from repro.parallel.collectives import compressed_psum_pods
+
+__all__ = ["logical_constraint", "partitioning_context", "DEFAULT_RULES",
+           "assign_spec", "merge_rules", "named_sharding", "tree_shardings",
+           "compressed_psum_pods"]

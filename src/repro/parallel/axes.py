@@ -1,0 +1,54 @@
+"""Logical axis names + an ambient constraint context.
+
+Models annotate activations with *logical* names; when a partitioning context
+is active (set by launch/steps.py under a mesh) the names resolve to
+``jax.lax.with_sharding_constraint``; otherwise they are no-ops, so the same
+model code runs unsharded on CPU tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+
+# canonical logical axes
+BATCH = "batch"
+SEQ = "seq"
+EMBED = "embed"
+HEADS = "heads"
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+MLP = "mlp"
+VOCAB = "vocab"
+EXPERTS = "experts"
+EXPERT_MLP = "expert_mlp"
+LAYERS = "layers"
+KV_SEQ = "kv_seq"
+STATE = "state"
+CONV = "conv"
+POD_CHUNK = "pod_chunk"
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def partitioning_context(resolver):
+    """``resolver(logical_names) -> NamedSharding`` or None."""
+    prev = getattr(_ctx, "resolver", None)
+    _ctx.resolver = resolver
+    try:
+        yield
+    finally:
+        _ctx.resolver = prev
+
+
+def logical_constraint(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    resolver = getattr(_ctx, "resolver", None)
+    if resolver is None:
+        return x
+    sharding = resolver(tuple(names), x.shape)
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)

@@ -1,0 +1,119 @@
+"""Logical-axis partitioner with divisibility fallback.
+
+Every tensor (params, activations, caches, batches) carries a tuple of
+logical axis names.  A *rule table* maps each name to an ordered list of
+mesh-axis candidates; per tensor, dims are assigned greedily in order:
+
+  * a candidate is a tuple of mesh axes (e.g. ``("pod", "data")``);
+  * it is taken iff all its axes exist in the mesh, none are already used by
+    this tensor, and their size product divides the dim;
+  * otherwise the next candidate is tried; no candidate -> dim unsharded.
+
+This single mechanism yields DP/TP/EP/SP layouts across all 10 architectures
+(DESIGN.md §5): e.g. a KV cache rule list ``kv_heads->model`` then
+``kv_seq->model`` automatically produces head-parallel decode for MHA archs
+and sequence-parallel (flash-decoding style) for GQA archs whose kv count
+doesn't divide the TP degree.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Candidate = Tuple[str, ...]
+Rules = Dict[str, Tuple[Candidate, ...]]
+
+# ordered candidates per logical axis name
+DEFAULT_RULES: Rules = {
+    "batch": (("pod", "data"), ("data",)),
+    "vocab": (("model",),),
+    "embed": (),
+    "mlp": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (),
+    "experts": (("model",),),
+    "expert_mlp": (),
+    "layers": (),
+    "seq": (),
+    "kv_seq": (("model",),),       # fallback after kv_heads (greedy order)
+    "state": (),
+    "conv": (),
+}
+
+
+def merge_rules(base: Rules, overrides: Sequence[Tuple[str, Tuple[Candidate, ...]]]) -> Rules:
+    rules = dict(base)
+    for name, cands in overrides:
+        rules[name] = tuple(tuple(c) for c in cands)
+    return rules
+
+
+def assign_spec(logical: Sequence[Optional[str]], shape: Sequence[int],
+                mesh: Mesh, rules: Rules) -> P:
+    """Greedy mesh-axis assignment for one tensor."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    entries = []
+    if len(logical) != len(shape):
+        raise ValueError(f"logical axes {logical} rank != shape {shape}")
+    for name, dim in zip(logical, shape):
+        chosen = None
+        for cand in rules.get(name, ()) if name else ():
+            if not cand:
+                continue
+            if any(a not in axis_sizes for a in cand):
+                continue
+            if any(a in used for a in cand):
+                continue
+            prod = 1
+            for a in cand:
+                prod *= axis_sizes[a]
+            if prod == 0 or dim % prod != 0:
+                continue
+            chosen = cand
+            break
+        if chosen is None:
+            entries.append(None)
+        else:
+            used.update(chosen)
+            entries.append(chosen if len(chosen) > 1 else chosen[0])
+    return P(*entries)
+
+
+def named_sharding(logical, shape, mesh: Mesh, rules: Rules) -> NamedSharding:
+    return NamedSharding(mesh, assign_spec(logical, shape, mesh, rules))
+
+
+def tree_shardings(axes_tree, abstract_tree, mesh: Mesh, rules: Rules):
+    """Map (axes pytree, ShapeDtypeStruct pytree) -> NamedSharding pytree."""
+    def one(axes, ab):
+        if axes is None or ab.ndim == 0:
+            # scalar or explicitly unannotated -> replicated
+            return NamedSharding(mesh, P())
+        return named_sharding(axes, ab.shape, mesh, rules)
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, abstract_tree,
+        is_leaf=lambda x: x is None or (isinstance(x, tuple) and len(x) > 0
+                                        and all(isinstance(e, (str, type(None)))
+                                                for e in x)))
+
+
+def activation_resolver(mesh: Mesh, rules: Rules):
+    """Resolver for models' ``logical_constraint`` annotations."""
+    def resolve(names, shape):
+        try:
+            return named_sharding(names, shape, mesh, rules)
+        except ValueError:
+            return None
+    return resolve
+
+
+def apply_spec_tree(tree, axes_tree, mesh, rules):
+    """with_sharding_constraint over a pytree using logical axes."""
+    sh = tree_shardings(axes_tree, jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree), mesh, rules)
+    return jax.tree_util.tree_map(jax.lax.with_sharding_constraint, tree, sh)

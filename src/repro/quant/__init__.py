@@ -1,0 +1,15 @@
+from repro.quant.formats import (
+    make_quantizer,
+    format_bits,
+    luq_fp4,
+    int4_uniform,
+    fp8_e4m3,
+    fp8_e5m2,
+    STOCHASTIC_FORMATS,
+)
+from repro.quant.fake_quant import qeinsum, qconv2d
+
+__all__ = [
+    "make_quantizer", "format_bits", "luq_fp4", "int4_uniform",
+    "fp8_e4m3", "fp8_e5m2", "STOCHASTIC_FORMATS", "qeinsum", "qconv2d",
+]

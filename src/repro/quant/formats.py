@@ -1,0 +1,134 @@
+"""Low-precision quantizer formats.
+
+All quantizers are *unbiased* and *scale-invariant* (the premises of the
+paper's Proposition 1), except the deterministic FP8 casts which are
+round-to-nearest (the paper's A.9 FP8 ablation uses plain casting).
+
+Implemented formats
+-------------------
+``luq_fp4``   LUQ-FP4 (Chmiel et al., 2024): 1 sign + 3 exponent bits.
+              Values are snapped onto a per-tensor power-of-two grid anchored
+              at max|x|; magnitudes below the smallest level are *stochastically
+              underflowed* to 0 or the smallest level; magnitudes inside the
+              grid are stochastically rounded between adjacent powers of two.
+              Unbiased: E[q(x) | x] = x (elementwise).
+``int4``      Uniform 4-bit: 15 symmetric levels with stochastic rounding.
+``fp8_e4m3``  / ``fp8_e5m2``: ml_dtypes round-trip cast (deterministic).
+``bf16``      bfloat16 round-trip cast.
+``none``      identity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+LUQ_EXP_LEVELS = 7   # 3 exponent bits -> 8 codes; one reserved for zero
+
+
+def _split_sign(x):
+    return jnp.sign(x), jnp.abs(x)
+
+
+def luq_fp4(x: jax.Array, key: jax.Array) -> jax.Array:
+    """LUQ FP4 stochastic quantizer (per-tensor max scaling).
+
+    Grid (relative to alpha = max|x|): {0} U {alpha * 2^-k : k = 0..6}.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    alpha = jnp.max(jnp.abs(xf))
+    # Guard all-zero tensors.
+    safe_alpha = jnp.where(alpha > 0, alpha, 1.0)
+    sign, mag = _split_sign(xf)
+    y = mag / safe_alpha                                  # in [0, 1]
+    min_level = 2.0 ** (-(LUQ_EXP_LEVELS - 1))            # 2^-6
+
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+
+    # --- underflow branch: |y| < 2^-6 -> {0, 2^-6} stochastically (unbiased)
+    p_under = y / min_level
+    under = jnp.where(u < p_under, min_level, 0.0)
+
+    # --- log-domain stochastic rounding between adjacent powers of two
+    ylog = jnp.log2(jnp.maximum(y, min_level))
+    k = jnp.clip(jnp.floor(ylog), -(LUQ_EXP_LEVELS - 1), 0.0)
+    low = jnp.exp2(k)
+    high = jnp.minimum(jnp.exp2(k + 1.0), 1.0)
+    denom = jnp.maximum(high - low, 1e-30)
+    p_up = (y - low) / denom
+    rounded = jnp.where(u < p_up, high, low)
+
+    q = jnp.where(y < min_level, under, rounded)
+    out = sign * q * safe_alpha
+    out = jnp.where(alpha > 0, out, 0.0)
+    return out.astype(dtype)
+
+
+def int4_uniform(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Uniform symmetric INT4 with stochastic rounding (paper A.9.2).
+
+    16 codes; we use the symmetric grid {-7..7} * Delta, Delta = max|x|/7.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    alpha = jnp.max(jnp.abs(xf))
+    safe_alpha = jnp.where(alpha > 0, alpha, 1.0)
+    delta = safe_alpha / 7.0
+    y = xf / delta                                        # in [-7, 7]
+    lo = jnp.floor(y)
+    frac = y - lo
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    q = lo + (u < frac).astype(jnp.float32)
+    q = jnp.clip(q, -7.0, 7.0)
+    out = q * delta
+    out = jnp.where(alpha > 0, out, 0.0)
+    return out.astype(dtype)
+
+
+def _cast_roundtrip(x: jax.Array, cast_dtype) -> jax.Array:
+    return x.astype(cast_dtype).astype(x.dtype)
+
+
+def fp8_e4m3(x: jax.Array, key=None) -> jax.Array:
+    del key
+    return _cast_roundtrip(x, jnp.float8_e4m3fn)
+
+
+def fp8_e5m2(x: jax.Array, key=None) -> jax.Array:
+    del key
+    return _cast_roundtrip(x, jnp.float8_e5m2)
+
+
+def bf16(x: jax.Array, key=None) -> jax.Array:
+    del key
+    return _cast_roundtrip(x, jnp.bfloat16)
+
+
+def identity(x: jax.Array, key=None) -> jax.Array:
+    del key
+    return x
+
+
+_FORMATS = {
+    "luq_fp4": luq_fp4,
+    "int4": int4_uniform,
+    "fp8_e4m3": fp8_e4m3,
+    "fp8_e5m2": fp8_e5m2,
+    "bf16": bf16,
+    "none": identity,
+}
+
+STOCHASTIC_FORMATS = ("luq_fp4", "int4")
+
+
+def make_quantizer(fmt: str) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Return ``q(x, key) -> x_q``. Raises KeyError for unknown formats."""
+    return _FORMATS[fmt]
+
+
+def format_bits(fmt: str) -> int:
+    return {"luq_fp4": 4, "int4": 4, "fp8_e4m3": 8, "fp8_e5m2": 8,
+            "bf16": 16, "none": 32}[fmt]

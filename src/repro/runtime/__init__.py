@@ -1,0 +1,6 @@
+from repro.runtime.elastic import MeshPlan, degrade_sequence, plan_remesh
+from repro.runtime.heartbeat import FailureDetector, Heartbeat
+from repro.runtime.straggler import StragglerDetector
+
+__all__ = ["MeshPlan", "degrade_sequence", "plan_remesh",
+           "FailureDetector", "Heartbeat", "StragglerDetector"]

@@ -1,0 +1,54 @@
+"""Elastic re-meshing after failures.
+
+Given the surviving host/chip count, pick the largest expressible mesh
+(keeping the model axis intact when possible — TP degree is baked into
+weight-shard divisibility, so we prefer shrinking the data/pod axes), and
+re-derive the DP accounting rate: privacy accounting is per-step (sigma, q)
+tuples, so a batch-size change on re-mesh is accounted exactly by updating
+the sample rate of subsequent steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    global_batch: int
+    sample_rate: float
+
+
+def plan_remesh(n_chips: int, model_parallel: int,
+                per_replica_batch: int, dataset_size: int,
+                pods: int = 1) -> Optional[MeshPlan]:
+    """Largest (data, model) mesh with the given TP degree that fits
+    ``n_chips``; None if even one replica no longer fits."""
+    if n_chips < model_parallel:
+        return None
+    data = n_chips // model_parallel
+    global_batch = data * per_replica_batch
+    return MeshPlan(
+        shape=(data, model_parallel),
+        axis_names=("data", "model"),
+        global_batch=global_batch,
+        sample_rate=min(1.0, global_batch / dataset_size),
+    )
+
+
+def degrade_sequence(start_chips: int, model_parallel: int,
+                     per_replica_batch: int, dataset_size: int,
+                     failures: List[int]) -> List[MeshPlan]:
+    """Simulate successive failures; returns the mesh plan after each."""
+    plans = []
+    chips = start_chips
+    for lost in failures:
+        chips -= lost
+        plan = plan_remesh(chips, model_parallel, per_replica_batch,
+                           dataset_size)
+        if plan is None:
+            break
+        plans.append(plan)
+    return plans

@@ -1,0 +1,198 @@
+"""Trainer: the full DPQuant training loop (paper Fig. 2 pipeline).
+
+Per epoch:
+  1. (every ``analysis_interval`` epochs) COMPUTELOSSIMPACT on Poisson-
+     sampled probe batches — charges one "analysis" SGM step;
+  2. SELECTTARGETS -> this epoch's quantized-layer flags;
+  3. ``steps_per_epoch`` DP-SGD/DP-Adam steps on Poisson-sampled batches —
+     each charges one "train" SGM step;
+  4. optional eval + checkpoint (params, opt, accountant, scheduler, sampler).
+
+Also supports mode="pls" / mode="static" (ablations / baselines) and
+dp.enabled=False (the non-private comparison in paper Fig. 1a).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import RunConfig
+from repro.core.scheduler import DPQuantScheduler
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.poisson import PoissonSampler
+from repro.dp.accountant import RDPAccountant
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_train_setup
+from repro.models.registry import Model, build_model
+from repro.optim.schedule import make_schedule
+
+
+@dataclasses.dataclass
+class EpochStats:
+    epoch: int
+    loss: float
+    eps: float
+    analysis_eps_fraction: float
+    quantized_layers: int
+    accuracy: Optional[float] = None
+    wall_s: float = 0.0
+
+
+class Trainer:
+    def __init__(self, run: RunConfig, dataset, *, mode: str = "dpquant",
+                 eval_dataset=None, mesh=None, checkpoint_dir: str = None,
+                 group_size: int = 1, eval_fn: Callable = None):
+        self.run = run
+        self.dataset = dataset
+        self.eval_dataset = eval_dataset
+        self.eval_fn = eval_fn
+        self.mode = mode
+        self.model: Model = build_model(run.model, run.quant)
+        self.mesh = mesh or make_host_mesh()
+        self.setup = build_train_setup(self.model, run, self.mesh)
+        self.step_fn = jax.jit(self.setup.step_fn,
+                               in_shardings=self.setup.in_shardings,
+                               out_shardings=self.setup.out_shardings)
+        self.schedule = make_schedule(run.optim, run.steps)
+        self.sampler = PoissonSampler(dataset.n, run.global_batch,
+                                      seed=run.seed)
+        self._probe_rng = np.random.RandomState(run.seed + 777)
+        self.accountant = RDPAccountant()
+        self.scheduler = DPQuantScheduler(
+            n_layers=run.model.policy_len(), dp=run.dp, mode=mode,
+            group_size=group_size, seed=run.seed)
+        self.params = self.model.init(jax.random.PRNGKey(run.seed))
+        self.opt_state = self.setup.opt_init_fn(self.params)
+        self.step = 0
+        self.history: List[EpochStats] = []
+        self.ckpt = (CheckpointManager(checkpoint_dir)
+                     if checkpoint_dir else None)
+
+    # ------------------------------------------------------------------ #
+    def _probe_step(self, params, opt_state, batch, seed, flags):
+        lr = self.schedule(self.step)
+        return self.step_fn(params, opt_state, batch, seed, flags,
+                            jnp.float32(lr))
+
+    def _sample_batch(self) -> dict:
+        return self.dataset.get(self.sampler.sample())
+
+    # ------------------------------------------------------------------ #
+    def train_epoch(self, epoch: int) -> EpochStats:
+        t0 = time.time()
+        run = self.run
+        # ---- Algorithm 1 (analysis) ----
+        if self.mode == "dpquant":
+            nb = min(run.dp.analysis_batch_size, run.global_batch)
+            nb = max(run.dp.microbatch_size, nb)
+            probe_batches = [self.dataset.get(self._probe_rng.randint(
+                0, self.dataset.n, nb)) for _ in range(run.dp.analysis_reps)]
+            self.scheduler.maybe_analyze(
+                probe_step=self._probe_step, params=self.params,
+                opt_state=self.opt_state, batches=probe_batches,
+                sample_rate=min(1.0, nb / self.dataset.n),
+                accountant=self.accountant,
+                epoch=epoch, seed=run.seed * 1000 + epoch)
+        # ---- Algorithm 2 (selection) ----
+        policy = self.scheduler.select(epoch)
+        flags = policy.flags()
+
+        # ---- DP-SGD steps ----
+        losses = []
+        for _ in range(run.steps_per_epoch):
+            batch = self._sample_batch()
+            lr = self.schedule(self.step)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch,
+                jnp.uint32(self.step + run.seed), flags, jnp.float32(lr))
+            losses.append(float(metrics["loss"]))
+            if run.dp.enabled:
+                self.accountant.step(
+                    noise_multiplier=run.dp.noise_multiplier,
+                    sample_rate=self.sampler.q, steps=1, label="train")
+            self.step += 1
+
+        eps, _ = (self.accountant.get_epsilon(run.dp.delta)
+                  if run.dp.enabled else (0.0, 0))
+        frac = (self.accountant.analysis_fraction(run.dp.delta)
+                if run.dp.enabled and self.mode == "dpquant" else 0.0)
+        acc = self.evaluate() if self.eval_dataset is not None else None
+        stats = EpochStats(epoch=epoch, loss=float(np.mean(losses)),
+                           eps=eps, analysis_eps_fraction=frac,
+                           quantized_layers=len(policy), accuracy=acc,
+                           wall_s=time.time() - t0)
+        self.history.append(stats)
+        if self.ckpt is not None:
+            self.save(epoch)
+        return stats
+
+    def train(self, epochs: int, *, eps_budget: Optional[float] = None,
+              verbose: bool = False) -> List[EpochStats]:
+        for e in range(epochs):
+            stats = self.train_epoch(e)
+            if verbose:
+                print(f"epoch {e}: loss={stats.loss:.4f} eps={stats.eps:.3f} "
+                      f"k={stats.quantized_layers} acc={stats.accuracy}")
+            if eps_budget is not None and stats.eps >= eps_budget:
+                break  # paper: truncate training at the privacy budget
+        return self.history
+
+    # ------------------------------------------------------------------ #
+    def evaluate(self, n: int = 512) -> float:
+        if self.eval_fn is not None:
+            return self.eval_fn(self.params)
+        idx = np.arange(min(n, self.eval_dataset.n))
+        batch = self.eval_dataset.get(idx)
+        if "label" not in batch:
+            return float("nan")
+        flags = jnp.zeros((self.run.model.policy_len(),), jnp.float32)
+        preds = self._predict(batch, flags)
+        return float((preds == np.asarray(batch["label"])).mean())
+
+    def _predict(self, batch, flags):
+        from repro.models import resnet as rn, densenet as dn, bert as bt
+        cfg, quant = self.run.model, self.run.quant
+        if cfg.family == "resnet":
+            logits = rn.forward(self.params, batch["image"], flags, cfg, quant)
+        elif cfg.family == "densenet":
+            logits = dn.forward(self.params, batch["image"], flags, cfg, quant)
+        elif cfg.family == "bert":
+            h = bt.forward(self.params, batch["tokens"], flags, cfg, quant)
+            logits = (h[:, 0].astype(jnp.float32) @ self.params["cls_w"]
+                      + self.params["cls_b"])
+        else:
+            raise ValueError(f"no predict for family {cfg.family}")
+        return np.asarray(jnp.argmax(logits, -1))
+
+    # ------------------------------------------------------------------ #
+    def save(self, epoch: int) -> None:
+        aux = {
+            "accountant": self.accountant.state_dict(),
+            "scheduler": self.scheduler.state_dict(),
+            "sampler": self.sampler.state_dict(),
+            "step": self.step,
+            "epoch": epoch,
+        }
+        self.ckpt.save(self.step, {"params": self.params,
+                                   "opt": self.opt_state}, aux)
+
+    def restore_latest(self) -> Optional[int]:
+        if self.ckpt is None:
+            return None
+        res = self.ckpt.restore_latest({"params": self.params,
+                                        "opt": self.opt_state})
+        if res is None:
+            return None
+        _, tree, aux = res
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.accountant = RDPAccountant.from_state_dict(aux["accountant"])
+        self.scheduler.load_state_dict(aux["scheduler"])
+        self.sampler.load_state_dict(aux["sampler"])
+        self.step = aux["step"]
+        return aux["epoch"]

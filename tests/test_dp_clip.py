@@ -1,0 +1,88 @@
+"""Per-example clipping invariants + noising statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dp.clip import clip_by_global_norm, per_example_clipped_grad_sum
+from repro.dp.noise import add_gaussian_noise
+
+
+def quad_loss(params, ex, rng):
+    del rng
+    return 0.5 * jnp.sum((params["w"] * ex["x"] - ex["y"]) ** 2)
+
+
+def make_batch(n=8, d=5, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"x": jax.random.normal(key, (n, d)),
+            "y": jax.random.normal(jax.random.fold_in(key, 1), (n, d))}
+
+
+def test_clipped_sum_bounded():
+    params = {"w": jnp.ones((5,)) * 2.0}
+    batch = make_batch()
+    C = 0.7
+    g, metrics = per_example_clipped_grad_sum(
+        quad_loss, params, batch, clip_norm=C, microbatch_size=4,
+        rng=jax.random.PRNGKey(0))
+    total = float(jnp.linalg.norm(g["w"]))
+    assert total <= 8 * C + 1e-5          # triangle inequality bound
+
+
+def test_microbatch_size_invariance():
+    """The clipped-grad sum must not depend on how the batch is chunked."""
+    params = {"w": jnp.ones((5,)) * 1.5}
+    batch = make_batch()
+    outs = []
+    for mb in (1, 2, 4, 8):
+        g, _ = per_example_clipped_grad_sum(
+            quad_loss, params, batch, clip_norm=1.0, microbatch_size=mb,
+            rng=jax.random.PRNGKey(0))
+        outs.append(np.asarray(g["w"]))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5)
+
+
+def test_matches_manual_per_example():
+    params = {"w": jnp.arange(1.0, 6.0)}
+    batch = make_batch(n=4)
+    C = 0.5
+    g, metrics = per_example_clipped_grad_sum(
+        quad_loss, params, batch, clip_norm=C, microbatch_size=2,
+        rng=jax.random.PRNGKey(0))
+    manual = np.zeros(5)
+    for i in range(4):
+        ex = {k: v[i] for k, v in batch.items()}
+        gi = np.asarray(jax.grad(quad_loss)(params, ex, None)["w"])
+        norm = np.linalg.norm(gi)
+        manual += gi * min(1.0, C / norm)
+    np.testing.assert_allclose(np.asarray(g["w"]), manual, rtol=1e-5)
+    assert metrics["clip_fraction"] >= 0.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((3,)) * 10, "b": jnp.ones((2, 2)) * -10}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    from repro.dp.clip import global_norm
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_noise_statistics():
+    zeros = {"w": jnp.zeros((20_000,))}
+    C, sigma, B = 1.3, 2.0, 16
+    noisy = add_gaussian_noise(zeros, clip_norm=C, noise_multiplier=sigma,
+                               batch_size=B, rng=jax.random.PRNGKey(0))
+    std = float(jnp.std(noisy["w"]))
+    expected = sigma * C / B
+    assert abs(std - expected) / expected < 0.05
+
+
+def test_noise_deterministic_in_key():
+    zeros = {"w": jnp.zeros((64,))}
+    n1 = add_gaussian_noise(zeros, clip_norm=1, noise_multiplier=1,
+                            batch_size=4, rng=jax.random.PRNGKey(5))
+    n2 = add_gaussian_noise(zeros, clip_norm=1, noise_multiplier=1,
+                            batch_size=4, rng=jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(n1["w"]), np.asarray(n2["w"]))

@@ -1,0 +1,87 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import luq_matmul, luq_quantize, clip_and_sum
+from repro.kernels import ref
+from repro.kernels.luq_quant import luq_quant_2d
+from repro.kernels.per_sample_clip import per_sample_clip
+from repro.kernels.quant_matmul import quant_matmul
+
+
+@pytest.mark.parametrize("shape", [(128, 128), (256, 256), (512, 384),
+                                   (128, 640)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_luq_kernel_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, shape, jnp.float32).astype(dtype)
+    u = jax.random.uniform(jax.random.fold_in(key, 1), shape, jnp.float32)
+    alpha = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    got = luq_quant_2d(x, u, alpha, block=(128, 128), interpret=True)
+    want = ref.luq_quant_ref(x, u, alpha)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("mkn", [(128, 256, 128), (256, 512, 128),
+                                 (128, 128, 256)])
+@pytest.mark.parametrize("block", [(128, 64, 128), (64, 128, 256)])
+def test_quant_matmul_matches_ref(mkn, block):
+    m, k, n = mkn
+    key = jax.random.PRNGKey(1)
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    ua = jax.random.uniform(jax.random.fold_in(key, 2), (m, k))
+    ub = jax.random.uniform(jax.random.fold_in(key, 3), (k, n))
+    aa, ab = jnp.max(jnp.abs(a)), jnp.max(jnp.abs(b))
+    got = quant_matmul(a, b, ua, ub, aa, ab, block=block, interpret=True)
+    want = ref.quant_matmul_ref(a, b, ua, ub, aa, ab)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,d", [(4, 512), (8, 1024), (3, 512)])
+def test_per_sample_clip_matches_ref(b, d):
+    g = jax.random.normal(jax.random.PRNGKey(2), (b, d), jnp.float32) * 2.5
+    got_sum, got_norms = per_sample_clip(g, 1.0, block_d=256, interpret=True)
+    want_sum, want_norms = ref.per_sample_clip_ref(g, 1.0)
+    np.testing.assert_allclose(np.asarray(got_norms), np.asarray(want_norms),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_sum), np.asarray(want_sum),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_luq_quantize_wrapper_odd_shapes():
+    x = jax.random.normal(jax.random.PRNGKey(3), (7, 13, 5), jnp.float32)
+    q = luq_quantize(x, jax.random.PRNGKey(4))
+    assert q.shape == x.shape
+    alpha = float(jnp.max(jnp.abs(x)))
+    grid = {0.0} | {alpha * 2.0 ** (-k) for k in range(7)}
+    for v in np.unique(np.abs(np.asarray(q))):
+        assert any(abs(v - g) <= 1e-5 * alpha for g in grid)
+
+
+def test_luq_matmul_wrapper_unbiased_direction():
+    key = jax.random.PRNGKey(5)
+    a = jax.random.normal(key, (64, 96))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (96, 32))
+    outs = [np.asarray(luq_matmul(a, b, jax.random.PRNGKey(i)))
+            for i in range(30)]
+    mean = np.mean(outs, 0)
+    exact = np.asarray(a @ b)
+    # many-draw mean approaches the exact product (unbiased quantizers)
+    rel = np.linalg.norm(mean - exact) / np.linalg.norm(exact)
+    single = np.linalg.norm(outs[0] - exact) / np.linalg.norm(exact)
+    assert rel < single / 2, (rel, single)
+
+
+def test_clip_and_sum_wrapper_pads():
+    g = jax.random.normal(jax.random.PRNGKey(6), (4, 333))
+    s, norms = clip_and_sum(g, 1.0)
+    ws, wn = ref.per_sample_clip_ref(g, 1.0)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(wn), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ws), rtol=1e-4,
+                               atol=1e-5)

@@ -1,0 +1,80 @@
+"""Fault tolerance: heartbeats, stragglers, elastic re-mesh."""
+import time
+
+from repro.runtime.elastic import degrade_sequence, plan_remesh
+from repro.runtime.heartbeat import FailureDetector, Heartbeat
+from repro.runtime.straggler import StragglerDetector
+
+
+def test_heartbeat_failure_detection(tmp_path):
+    now = time.time()
+    for hid in range(4):
+        Heartbeat(tmp_path, hid).beat(step=10, now=now)
+    det = FailureDetector(tmp_path, deadline_s=30.0)
+    assert det.dead_hosts(now=now + 1) == []
+    # host 2 stops beating
+    for hid in (0, 1, 3):
+        Heartbeat(tmp_path, hid).beat(step=20, now=now + 60)
+    assert det.dead_hosts(now=now + 61) == [2]
+    assert det.alive_hosts(now=now + 61) == [0, 1, 3]
+
+
+def test_straggler_detection():
+    det = StragglerDetector(alpha=0.5, k_sigma=2.0, patience=2)
+    for step in range(6):
+        for hid in range(8):
+            t = 1.0 if hid != 5 else 3.0     # host 5 is 3x slower
+        # record in a separate loop to keep the ewma independent
+        for hid in range(8):
+            det.record(hid, 1.0 if hid != 5 else 3.0)
+        det.update_strikes()
+    assert det.stragglers() == [5]
+
+
+def test_straggler_no_false_positive():
+    det = StragglerDetector(patience=2)
+    for _ in range(5):
+        for hid in range(4):
+            det.record(hid, 1.0)
+        det.update_strikes()
+    assert det.stragglers() == []
+
+
+def test_elastic_remesh_keeps_tp():
+    plan = plan_remesh(n_chips=512, model_parallel=16,
+                       per_replica_batch=8, dataset_size=1_000_000)
+    assert plan.shape == (32, 16)
+    assert plan.global_batch == 256
+    # lose 64 chips -> 28 data replicas
+    plan2 = plan_remesh(n_chips=448, model_parallel=16,
+                        per_replica_batch=8, dataset_size=1_000_000)
+    assert plan2.shape == (28, 16)
+    assert plan2.sample_rate < plan.sample_rate
+
+
+def test_elastic_degrade_sequence():
+    plans = degrade_sequence(512, 16, 8, 1_000_000, failures=[64, 128, 300])
+    assert len(plans) == 3
+    assert plans[-1].shape[0] >= 1
+    # catastrophic loss -> None / truncation
+    plans = degrade_sequence(32, 16, 8, 1_000_000, failures=[31])
+    assert len(plans) == 0
+
+
+def test_checkpoint_reshard_on_new_mesh(tmp_path):
+    """Elastic restart: save under one sharding, restore under another."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import serialization
+
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    serialization.save(tmp_path / "c.ckpt", tree)
+    mesh = jax.make_mesh((1,), ("model",))
+    sh = {"w": NamedSharding(mesh, P("model", None))}
+    restored, _ = serialization.restore(tmp_path / "c.ckpt", tree,
+                                        shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["w"].sharding == sh["w"]

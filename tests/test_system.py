@@ -1,0 +1,112 @@
+"""End-to-end behaviour tests for the DPQuant system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (DPConfig, ModelConfig, OptimConfig, QuantConfig,
+                          RunConfig)
+from repro.data.synthetic import ImageClassDataset, TokenDataset
+from repro.train_loop import Trainer
+
+
+def small_cnn_run(mode="dpquant", fmt="luq_fp4", dp_enabled=True,
+                  quant_fraction=0.6, seed=0, steps_per_epoch=4,
+                  optimizer="sgd"):
+    model = ModelConfig(name="cnn", family="resnet", resnet_blocks=(1, 1),
+                        num_classes=8, image_size=16,
+                        compute_dtype="float32")
+    return RunConfig(
+        model=model, quant=QuantConfig(fmt=fmt),
+        dp=DPConfig(enabled=dp_enabled, clip_norm=1.0, noise_multiplier=1.0,
+                    microbatch_size=16, quant_fraction=quant_fraction,
+                    analysis_interval=2, analysis_reps=1, beta=10.0),
+        optim=OptimConfig(name=optimizer, lr=0.5 if optimizer == "sgd" else 1e-2),
+        global_batch=32, steps_per_epoch=steps_per_epoch,
+        steps=100, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def datasets():
+    train = ImageClassDataset(n=512, num_classes=8, image_size=16, noise=0.4)
+    evald = ImageClassDataset(n=128, num_classes=8, image_size=16,
+                              noise=0.4, seed=9)
+    return train, evald
+
+
+def test_dpquant_full_loop(datasets):
+    train, evald = datasets
+    tr = Trainer(small_cnn_run(), train, eval_dataset=evald, mode="dpquant")
+    hist = tr.train(4)
+    assert hist[-1].eps > 0
+    labels = {e.label for e in tr.accountant.history}
+    assert labels == {"train", "analysis"}
+    assert 0 < tr.accountant.analysis_fraction(1e-5) < 1
+    assert hist[-1].quantized_layers == round(0.6 * 3)
+
+
+def test_loss_decreases_without_noise(datasets):
+    """Sanity: DP machinery off, quantization off -> the substrate learns."""
+    train, evald = datasets
+    run = small_cnn_run(fmt="none", dp_enabled=False, mode="static")
+    tr = Trainer(run, train, eval_dataset=evald, mode="static")
+    hist = tr.train(5)
+    assert hist[-1].loss < hist[0].loss
+
+
+def test_dp_adam_variant(datasets):
+    """Paper A.5: the mechanism composes with DP-Adam unchanged."""
+    train, _ = datasets
+    tr = Trainer(small_cnn_run(optimizer="adam"), train, mode="dpquant")
+    hist = tr.train(2)
+    assert np.isfinite(hist[-1].loss)
+    assert hist[-1].eps > 0
+
+
+def test_checkpoint_restart_continuity(tmp_path, datasets):
+    """Fault-tolerance: kill after epoch 2, restart, and the accountant
+    remembers the spent budget (never under-reports epsilon)."""
+    train, _ = datasets
+    run = small_cnn_run(seed=3)
+    tr1 = Trainer(run, train, mode="dpquant", checkpoint_dir=str(tmp_path))
+    tr1.train(2)
+    if tr1.ckpt:
+        tr1.ckpt.wait()
+    eps_before = tr1.accountant.get_epsilon(1e-5)[0]
+
+    tr2 = Trainer(run, train, mode="dpquant", checkpoint_dir=str(tmp_path))
+    resumed_epoch = tr2.restore_latest()
+    assert resumed_epoch == 1
+    eps_after = tr2.accountant.get_epsilon(1e-5)[0]
+    assert abs(eps_after - eps_before) < 1e-9
+    assert tr2.step == tr1.step
+    np.testing.assert_array_equal(tr2.scheduler.scores, tr1.scheduler.scores)
+    tr2.train(1)
+    assert tr2.accountant.get_epsilon(1e-5)[0] > eps_after
+
+
+def test_eps_budget_truncation(datasets):
+    train, _ = datasets
+    tr = Trainer(small_cnn_run(), train, mode="static")
+    hist = tr.train(50, eps_budget=3.0)
+    assert len(hist) < 50
+    assert hist[-1].eps >= 3.0
+
+
+def test_lm_family_trainer():
+    model = ModelConfig(name="lm", family="dense_lm", n_layers=2, d_model=32,
+                        n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64,
+                        vocab_size=128, compute_dtype="float32",
+                        attn_chunk_q=16, ce_chunk=16, pad_vocab_to=16)
+    run = RunConfig(model=model, quant=QuantConfig(fmt="luq_fp4"),
+                    dp=DPConfig(enabled=True, microbatch_size=4,
+                                quant_fraction=0.5, analysis_interval=1,
+                                analysis_reps=1),
+                    optim=OptimConfig(name="adam", lr=1e-3),
+                    global_batch=8, seq_len=32, steps_per_epoch=2,
+                    steps=10, seed=0)
+    ds = TokenDataset(n=128, vocab=128, seq_len=32)
+    tr = Trainer(run, ds, mode="dpquant")
+    hist = tr.train(2)
+    assert np.isfinite(hist[-1].loss)
+    assert tr.scheduler.n_analyses == 2
