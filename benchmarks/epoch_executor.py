@@ -1,0 +1,128 @@
+"""Epoch executor benchmark: looped vs scanned DP-SGD epochs (steps/sec).
+
+Measures the throughput of ``Trainer.train_epoch`` for the two executors on
+a synthetic ResNet config (the paper's primary model family at CPU scale).
+The looped path dispatches one jitted step at a time and syncs the host on
+every step; the scanned path compiles the whole epoch into one
+``jax.lax.scan`` program with donated buffers and syncs once per epoch.
+
+The scanned program is the pure-compute baseline, so
+``overhead_ms_per_step = wall(loop) - wall(scan)`` isolates the per-step
+host cost (dispatch, argument processing, loss sync, accounting) that the
+scan executor removes.  On a slow/few-core CPU the DP step is heavily
+compute-bound and the wall-clock ratio is modest; on hosts where dispatch
+latency rivals step compute (async GPU/TPU backends, many-core CPUs with
+small models) the same elimination is the difference between host-bound
+and device-bound training.
+
+    PYTHONPATH=src python benchmarks/epoch_executor.py
+    PYTHONPATH=src python benchmarks/epoch_executor.py --smoke   # CI job
+
+Writes ``BENCH_epoch_executor.json`` (cwd) and prints ``epoch_executor,...``
+CSV rows (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from common import emit, make_run
+from repro.config import ModelConfig
+from repro.data.synthetic import ImageClassDataset
+from repro.train_loop import Trainer
+
+
+def bench_executors(base_run, dataset, *, epochs: int,
+                    warmup_epochs: int = 2) -> dict:
+    """Time both executors, interleaving epochs to cancel machine drift."""
+    trainers = {}
+    for executor in ("loop", "scan"):
+        run = dataclasses.replace(base_run, epoch_executor=executor)
+        trainers[executor] = Trainer(run, dataset, mode="static")
+        for _ in range(warmup_epochs):      # compile + populate data cache
+            trainers[executor].train_epoch(-1)
+    walls = {"loop": 0.0, "scan": 0.0}
+    for e in range(epochs):
+        for executor, tr in trainers.items():
+            t0 = time.perf_counter()
+            tr.train_epoch(e)
+            walls[executor] += time.perf_counter() - t0
+    steps = epochs * base_run.steps_per_epoch
+    return {executor: {"executor": executor, "epochs": epochs,
+                       "steps": steps, "wall_s": dt,
+                       "steps_per_sec": steps / dt,
+                       "ms_per_step": dt / steps * 1e3}
+            for executor, dt in walls.items()}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for the CI smoke job")
+    ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--steps-per-epoch", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--unroll", type=int, default=1,
+                    help="lax.scan unroll for the scan executor (costly "
+                         "compile; >1 only pays off on fast hosts)")
+    ap.add_argument("--out", default="BENCH_epoch_executor.json")
+    args = ap.parse_args(argv)
+
+    epochs = args.epochs or (2 if args.smoke else 6)
+    spe = args.steps_per_epoch or (4 if args.smoke else 32)
+    batch = args.batch or (2 if args.smoke else 2)
+
+    # Synthetic ResNet (paper's primary family), sized so the per-step host
+    # overhead — the thing the scan executor removes — is visible next to
+    # the heavily compute-bound DP per-example-gradient step.
+    model = ModelConfig(name="resnet18-bench", family="resnet",
+                        resnet_blocks=(1, 1), num_classes=10,
+                        image_size=8 if args.smoke else 16,
+                        compute_dtype="float32")
+    base = dataclasses.replace(
+        make_run(model, fmt="luq_fp4", dp=True, batch=batch,
+                 steps_per_epoch=spe, optimizer="sgd"),
+        epoch_unroll=args.unroll)
+    ds = ImageClassDataset(n=512, num_classes=10,
+                           image_size=model.image_size, noise=0.4, seed=0)
+    # Fully materialize the example cache up front: the executors share the
+    # dataset, and whichever runs an epoch first would otherwise pay every
+    # generation miss for both (biasing the comparison).
+    ds.get(np.arange(ds.n))
+
+    results = bench_executors(base, ds, epochs=epochs)
+    for r in results.values():
+        emit("epoch_executor", executor=r["executor"], steps=r["steps"],
+             wall_s=round(r["wall_s"], 4),
+             steps_per_sec=round(r["steps_per_sec"], 3))
+
+    speedup = (results["scan"]["steps_per_sec"]
+               / results["loop"]["steps_per_sec"])
+    overhead = (results["loop"]["ms_per_step"]
+                - results["scan"]["ms_per_step"])
+    emit("epoch_executor", executor="speedup", steps="-", wall_s="-",
+         steps_per_sec=round(speedup, 3))
+
+    payload = {
+        "benchmark": "epoch_executor",
+        "config": {"model": "resnet18-bench (blocks=(1,1), synthetic)",
+                   "image_size": model.image_size, "batch": batch,
+                   "steps_per_epoch": spe, "epochs": epochs, "dp": True,
+                   "fmt": "luq_fp4", "unroll": args.unroll,
+                   "smoke": args.smoke},
+        "loop": results["loop"], "scan": results["scan"],
+        "speedup_scan_over_loop": speedup,
+        "host_overhead_removed_ms_per_step": overhead,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out} (speedup {speedup:.2f}x, "
+          f"host overhead removed {overhead:.2f} ms/step)")
+
+
+if __name__ == "__main__":
+    main()

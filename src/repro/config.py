@@ -198,5 +198,15 @@ class RunConfig:
     seq_len: int = 1024
     steps: int = 100
     steps_per_epoch: int = 10
+    # "scan": compile the whole epoch into one jax.lax.scan program with
+    # donated params/opt buffers (one host sync per epoch).  "loop": the
+    # legacy per-step python loop (one host sync per step).
+    epoch_executor: str = "scan"
+    # 0 = scan the whole epoch at once; k > 0 = scan fixed-size chunks of k
+    # steps (bounds the device memory held by the stacked epoch batches).
+    epoch_chunk: int = 0
+    # lax.scan unroll factor for the scan executor (compile time vs
+    # throughput; 1 = no unrolling).
+    epoch_unroll: int = 1
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 100

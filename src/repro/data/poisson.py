@@ -30,6 +30,16 @@ class PoissonSampler:
             idx = np.concatenate([idx, pad])
         return idx
 
+    def sample_epoch(self, steps: int) -> np.ndarray:
+        """Pre-draw ``steps`` batches as a ``(steps, batch_size)`` array.
+
+        Consumes the RNG stream exactly as ``steps`` successive ``sample()``
+        calls would, so the scanned epoch executor sees bit-identical batch
+        indices to the legacy per-step loop (and checkpointed sampler state
+        stays interchangeable between the two executors).
+        """
+        return np.stack([self.sample() for _ in range(steps)])
+
     def state_dict(self) -> dict:
         return {"rng_state": self._rng.get_state()}
 

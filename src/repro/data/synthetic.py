@@ -10,7 +10,11 @@ Three stream families:
 * ``NLIDataset`` — token-pair classification (SNLI-like 3 classes) for BERT.
 
 All are index-addressable (``get(indices)``) so the Poisson subsampler (the
-DP sampling assumption) can draw arbitrary subsets.
+DP sampling assumption) can draw arbitrary subsets.  Example generation is
+deterministic per index, so every dataset memoizes generated examples: the
+first epoch pays the python-loop generation cost, later epochs are a pure
+numpy gather (this keeps host-side data work off the critical path of the
+scanned epoch executor).
 """
 from __future__ import annotations
 
@@ -36,14 +40,21 @@ class ImageClassDataset:
         self.prototypes = rng.randn(self.num_classes, d).astype(np.float32)
         self.labels = rng.randint(0, self.num_classes, size=self.n).astype(np.int32)
         self._noise_seed = rng.randint(0, 2**31 - 1, size=self.n)
+        self._cache: dict = {}
+
+    def _example(self, idx: int) -> np.ndarray:
+        x = self._cache.get(idx)
+        if x is None:
+            d = self.image_size * self.image_size * self.channels
+            r = np.random.RandomState(self._noise_seed[idx])
+            x = (self.prototypes[self.labels[idx]]
+                 + self.noise * r.randn(d)).astype(np.float32)
+            self._cache[idx] = x
+        return x
 
     def get(self, indices: np.ndarray) -> dict:
-        d = self.image_size * self.image_size * self.channels
-        xs = np.empty((len(indices), d), np.float32)
         ys = self.labels[indices]
-        for i, idx in enumerate(indices):
-            r = np.random.RandomState(self._noise_seed[idx])
-            xs[i] = self.prototypes[ys[i]] + self.noise * r.randn(d)
+        xs = np.stack([self._example(int(idx)) for idx in indices])
         xs = xs.reshape(len(indices), self.image_size, self.image_size,
                         self.channels)
         return {"image": jnp.asarray(xs), "label": jnp.asarray(ys)}
@@ -63,10 +74,11 @@ class TokenDataset:
         self.successors = rng.randint(0, self.vocab,
                                       size=(self.vocab, 8)).astype(np.int32)
         self._seeds = rng.randint(0, 2**31 - 1, size=self.n)
+        self._cache: dict = {}
 
-    def get(self, indices: np.ndarray) -> dict:
-        out = np.empty((len(indices), self.seq_len), np.int32)
-        for i, idx in enumerate(indices):
+    def _example(self, idx: int) -> np.ndarray:
+        seq = self._cache.get(idx)
+        if seq is None:
             r = np.random.RandomState(self._seeds[idx])
             seq = np.empty(self.seq_len, np.int32)
             seq[0] = r.randint(self.vocab)
@@ -75,7 +87,11 @@ class TokenDataset:
                     seq[t] = self.successors[seq[t - 1], r.randint(8)]
                 else:
                     seq[t] = r.randint(self.vocab)
-            out[i] = seq
+            self._cache[idx] = seq
+        return seq
+
+    def get(self, indices: np.ndarray) -> dict:
+        out = np.stack([self._example(int(idx)) for idx in indices])
         return {"tokens": jnp.asarray(out)}
 
 
@@ -93,15 +109,20 @@ class NLIDataset:
         self.class_tokens = rng.randint(0, self.vocab,
                                         size=(self.num_classes, 16)).astype(np.int32)
         self._seeds = rng.randint(0, 2**31 - 1, size=self.n)
+        self._cache: dict = {}
 
-    def get(self, indices: np.ndarray) -> dict:
-        xs = np.empty((len(indices), self.seq_len), np.int32)
-        ys = self.labels[indices]
-        for i, idx in enumerate(indices):
+    def _example(self, idx: int) -> np.ndarray:
+        seq = self._cache.get(idx)
+        if seq is None:
             r = np.random.RandomState(self._seeds[idx])
             seq = r.randint(0, self.vocab, self.seq_len)
             # plant class-indicative tokens at random positions
             pos = r.choice(self.seq_len, 8, replace=False)
-            seq[pos] = self.class_tokens[ys[i], r.randint(0, 16, 8)]
-            xs[i] = seq
+            seq[pos] = self.class_tokens[self.labels[idx], r.randint(0, 16, 8)]
+            self._cache[idx] = seq.astype(np.int32)
+        return self._cache[idx]
+
+    def get(self, indices: np.ndarray) -> dict:
+        ys = self.labels[indices]
+        xs = np.stack([self._example(int(idx)) for idx in indices])
         return {"tokens": jnp.asarray(xs), "label": jnp.asarray(ys)}

@@ -171,10 +171,19 @@ class RDPAccountant:
     # -- recording -------------------------------------------------------- #
     def step(self, *, noise_multiplier: float, sample_rate: float,
              steps: int = 1, label: str = "train") -> None:
+        """Record ``steps`` SGM steps in one call.
+
+        RDP composition is additive across steps, so charging an epoch in
+        one ``steps=steps_per_epoch`` call (as the scanned epoch executor
+        does) is mathematically identical to — and, with event merging
+        below, produces the same history as — ``steps`` single-step calls.
+        """
         if not (0.0 <= sample_rate <= 1.0):
             raise ValueError(f"sample_rate must be in [0,1], got {sample_rate}")
         if noise_multiplier < 0:
             raise ValueError("noise_multiplier must be >= 0")
+        if steps < 1:
+            raise ValueError(f"steps must be >= 1, got {steps}")
         if self.history and self.history[-1].noise_multiplier == noise_multiplier \
                 and self.history[-1].sample_rate == sample_rate \
                 and self.history[-1].label == label:
@@ -183,6 +192,11 @@ class RDPAccountant:
             self.history.append(SGMEvent(noise_multiplier, sample_rate, steps, label))
 
     # -- querying --------------------------------------------------------- #
+    def total_steps(self, label: Optional[str] = None) -> int:
+        """Total recorded SGM steps (optionally for one label)."""
+        return sum(ev.steps for ev in self.history
+                   if label is None or ev.label == label)
+
     def _rdp_single(self, sigma: float, q: float) -> Tuple[float, ...]:
         key = (sigma, q)
         if key not in self._rdp_cache:

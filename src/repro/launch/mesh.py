@@ -4,23 +4,38 @@
 importing this module never touches jax device state; the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import and then calls this.
+
+``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+``jax.make_mesh``) only exist in newer JAX releases; ``make_compat_mesh``
+papers over the difference so every mesh in the repo builds on any
+supported JAX.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto
+    AxisType = None
+
+
+def make_compat_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Mesh over whatever devices exist (CPU tests / small runs)."""
     n = len(jax.devices())
     mp = model_parallel if n % model_parallel == 0 else 1
-    return jax.make_mesh((n // mp, mp), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_compat_mesh((n // mp, mp), ("data", "model"))

@@ -168,6 +168,59 @@ def build_train_setup(model: Model, run: RunConfig, mesh: Mesh,
         mesh=mesh, rules=rules, init_fn=init_fn, opt_init_fn=opt.init)
 
 
+def build_epoch_fn(setup: TrainSetup, *, unroll: int = 1):
+    """Compile a whole epoch (or chunk of steps) into one scan program.
+
+    Returns a jitted function
+
+        ``epoch_fn(params, opt_state, batches, seeds, qflags, lrs)
+            -> (params, opt_state, metrics)``
+
+    where ``batches`` is the epoch's pre-drawn batch tree with a leading
+    ``steps`` axis, ``seeds``/``lrs`` are per-step ``(steps,)`` arrays, and
+    ``metrics`` holds every per-step metric stacked on device.  The body is
+    exactly ``setup.step_fn`` — the same traced computation the per-step
+    executor jits — scanned over the step axis, so the two executors are
+    numerically interchangeable.  ``params``/``opt_state`` buffers are
+    donated: the epoch program updates them in place instead of allocating
+    a second copy of the model per step.
+
+    ``unroll`` is forwarded to ``jax.lax.scan``: unrolling k step bodies per
+    loop iteration removes while-loop overhead and lets XLA overlap the
+    params-independent work of adjacent steps (batch dequant, PRNG,
+    DP-noise generation); it trades compile time for throughput, so the
+    default stays 1 and the benchmark/production configs opt in.
+
+    The epoch program carries the same shardings as the per-step jit:
+    params/opt keep ``setup``'s tree shardings and the stacked batches get
+    the per-step batch sharding with a replicated leading step axis, so on
+    a multi-device mesh the scan executor partitions exactly like the
+    legacy loop instead of falling back to unannotated placement.
+    """
+    param_sh, opt_sh, batch_sh = setup.in_shardings[:3]
+    stacked_batch_sh = jax.tree_util.tree_map(
+        lambda sh: NamedSharding(sh.mesh, P(None, *sh.spec)), batch_sh)
+    rep = _replicated(setup.mesh)
+
+    def epoch_fn(params, opt_state, batches, seeds, qflags, lrs):
+        def body(carry, xs):
+            p, o = carry
+            batch, seed, lr = xs
+            p, o, metrics = setup.step_fn(p, o, batch, seed, qflags, lr)
+            return (p, o), metrics
+
+        (params, opt_state), metrics = jax.lax.scan(
+            body, (params, opt_state), (batches, seeds, lrs),
+            unroll=unroll)
+        return params, opt_state, metrics
+
+    return jax.jit(
+        epoch_fn,
+        in_shardings=(param_sh, opt_sh, stacked_batch_sh, rep, rep, rep),
+        out_shardings=setup.out_shardings,
+        donate_argnums=(0, 1))
+
+
 @dataclasses.dataclass
 class ServeSetup:
     prefill_fn: Callable

@@ -51,6 +51,13 @@ def main(argv=None):
     ap.add_argument("--eps", type=float, default=None,
                     help="stop when the privacy budget is reached")
     ap.add_argument("--microbatch", type=int, default=16)
+    ap.add_argument("--executor", default="scan", choices=["scan", "loop"],
+                    help="epoch executor: one compiled scan per epoch "
+                         "(default) or the legacy per-step loop")
+    ap.add_argument("--epoch-chunk", type=int, default=0,
+                    help="scan chunk size in steps (0 = whole epoch)")
+    ap.add_argument("--epoch-unroll", type=int, default=1,
+                    help="lax.scan unroll factor for the scan executor")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -67,7 +74,9 @@ def main(argv=None):
         optim=OptimConfig(name=args.optimizer, lr=args.lr),
         global_batch=args.batch, seq_len=args.seq_len,
         steps_per_epoch=args.steps_per_epoch,
-        steps=args.epochs * args.steps_per_epoch, seed=args.seed)
+        steps=args.epochs * args.steps_per_epoch, seed=args.seed,
+        epoch_executor=args.executor, epoch_chunk=args.epoch_chunk,
+        epoch_unroll=args.epoch_unroll)
 
     ds = make_dataset(cfg, args.dataset_size, args.seq_len, args.seed)
     ev = make_dataset(cfg, 512, args.seq_len, args.seed + 1) \

@@ -24,6 +24,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:  # jax >= 0.5 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def _quantize_int8(x, key):
     scale = jnp.max(jnp.abs(x)) / 127.0
@@ -68,7 +73,7 @@ def compressed_psum_pods(partials, mesh: Mesh, seed: jax.Array,
             qsum = jax.lax.psum(q.astype(jnp.int32), "pod")
             return qsum.astype(jnp.float32) * scale
 
-        fn = jax.shard_map(body, mesh=mesh, in_specs=(in_spec,),
-                           out_specs=out_spec)
+        fn = _shard_map(body, mesh=mesh, in_specs=(in_spec,),
+                        out_specs=out_spec)
         out.append(fn(leaf))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -8,6 +8,24 @@ Per epoch:
      each charges one "train" SGM step;
   4. optional eval + checkpoint (params, opt, accountant, scheduler, sampler).
 
+Two epoch executors (``RunConfig.epoch_executor``):
+
+  * ``"scan"`` (default) — the epoch's Poisson batches are pre-drawn,
+    stacked, and the whole epoch runs as ONE compiled ``jax.lax.scan``
+    program with donated params/opt buffers.  Invariant: the host
+    synchronizes with the device **once per epoch** (reading the stacked
+    per-step metrics); the RDP accountant is charged once with
+    ``steps=steps_per_epoch``.  The quantization flags are fixed for the
+    epoch (paper Fig. 2), so they ride along as a broadcast operand.
+  * ``"loop"`` — the legacy per-step python loop (one dispatch + one host
+    sync + one accountant charge per step).  Kept as a fallback and as the
+    reference for the scan/loop equivalence test.
+
+Both executors draw identical sample indices, per-step seeds, and learning
+rates from the same ``RunConfig.seed``, and the accountant merges
+consecutive identical SGM events, so they produce identical params,
+optimizer state, and epsilon on a fixed seed.
+
 Also supports mode="pls" / mode="static" (ablations / baselines) and
 dp.enabled=False (the non-private comparison in paper Fig. 1a).
 """
@@ -27,7 +45,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.data.poisson import PoissonSampler
 from repro.dp.accountant import RDPAccountant
 from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import build_train_setup
+from repro.launch.steps import build_epoch_fn, build_train_setup
 from repro.models.registry import Model, build_model
 from repro.optim.schedule import make_schedule
 
@@ -58,6 +76,12 @@ class Trainer:
         self.step_fn = jax.jit(self.setup.step_fn,
                                in_shardings=self.setup.in_shardings,
                                out_shardings=self.setup.out_shardings)
+        if run.epoch_executor not in ("scan", "loop"):
+            raise ValueError(
+                f"epoch_executor must be 'scan' or 'loop', "
+                f"got {run.epoch_executor!r}")
+        self.epoch_fn = (build_epoch_fn(self.setup, unroll=run.epoch_unroll)
+                         if run.epoch_executor == "scan" else None)
         self.schedule = make_schedule(run.optim, run.steps)
         self.sampler = PoissonSampler(dataset.n, run.global_batch,
                                       seed=run.seed)
@@ -103,19 +127,10 @@ class Trainer:
         flags = policy.flags()
 
         # ---- DP-SGD steps ----
-        losses = []
-        for _ in range(run.steps_per_epoch):
-            batch = self._sample_batch()
-            lr = self.schedule(self.step)
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch,
-                jnp.uint32(self.step + run.seed), flags, jnp.float32(lr))
-            losses.append(float(metrics["loss"]))
-            if run.dp.enabled:
-                self.accountant.step(
-                    noise_multiplier=run.dp.noise_multiplier,
-                    sample_rate=self.sampler.q, steps=1, label="train")
-            self.step += 1
+        if run.epoch_executor == "scan":
+            losses = self._train_steps_scan(flags)
+        else:
+            losses = self._train_steps_loop(flags)
 
         eps, _ = (self.accountant.get_epsilon(run.dp.delta)
                   if run.dp.enabled else (0.0, 0))
@@ -130,6 +145,54 @@ class Trainer:
         if self.ckpt is not None:
             self.save(epoch)
         return stats
+
+    def _train_steps_loop(self, flags) -> List[float]:
+        """Legacy executor: one dispatch + host sync + charge per step."""
+        run = self.run
+        losses = []
+        for _ in range(run.steps_per_epoch):
+            batch = self._sample_batch()
+            lr = self.schedule(self.step)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch,
+                jnp.uint32(self.step + run.seed), flags, jnp.float32(lr))
+            losses.append(float(metrics["loss"]))
+            if run.dp.enabled:
+                self.accountant.step(
+                    noise_multiplier=run.dp.noise_multiplier,
+                    sample_rate=self.sampler.q, steps=1, label="train")
+            self.step += 1
+        return losses
+
+    def _train_steps_scan(self, flags) -> List[float]:
+        """Scan executor: the epoch (in chunks of ``epoch_chunk`` steps, or
+        whole) runs as one compiled program; the host syncs once per chunk
+        and the accountant is charged once per epoch."""
+        run = self.run
+        steps = run.steps_per_epoch
+        chunk = run.epoch_chunk if run.epoch_chunk > 0 else steps
+        losses: List[float] = []
+        done = 0
+        while done < steps:
+            k = min(chunk, steps - done)
+            idx = self.sampler.sample_epoch(k)
+            flat = self.dataset.get(idx.reshape(-1))
+            batches = jax.tree_util.tree_map(
+                lambda x: x.reshape((k, -1) + x.shape[1:]), flat)
+            seeds = jnp.asarray(
+                np.arange(self.step, self.step + k) + run.seed, jnp.uint32)
+            lrs = jnp.asarray([self.schedule(self.step + i) for i in range(k)],
+                              jnp.float32)
+            self.params, self.opt_state, metrics = self.epoch_fn(
+                self.params, self.opt_state, batches, seeds, flags, lrs)
+            losses.extend(float(v) for v in np.asarray(metrics["loss"]))
+            self.step += k
+            done += k
+        if run.dp.enabled:
+            self.accountant.step(
+                noise_multiplier=run.dp.noise_multiplier,
+                sample_rate=self.sampler.q, steps=steps, label="train")
+        return losses
 
     def train(self, epochs: int, *, eps_budget: Optional[float] = None,
               verbose: bool = False) -> List[EpochStats]:

@@ -1,0 +1,62 @@
+"""``hypothesis`` shim: real property testing when installed, fixed grids not.
+
+``hypothesis`` is a dev extra (see pyproject.toml).  In minimal containers it
+may be absent; property tests then degenerate to a deterministic grid over
+each strategy's bounds so the suite still runs (and still exercises the
+property at the extremes) instead of failing at collection.
+"""
+from __future__ import annotations
+
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    class _GridStrategy:
+        def __init__(self, values):
+            self.values = list(values)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            span = max_value - min_value
+            picks = {min_value, max_value,
+                     min_value + span // 3, min_value + (2 * span) // 3}
+            return _GridStrategy(sorted(picks))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            if min_value > 0:
+                vals = np.geomspace(min_value, max_value, 4)
+            else:
+                vals = np.linspace(min_value, max_value, 4)
+            return _GridStrategy(float(v) for v in vals)
+
+    st = _Strategies()
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            cases = list(itertools.product(*(s.values for s in strategies)))
+
+            def wrapper():
+                for case in cases:
+                    fn(*case)
+            # NOT functools.wraps: pytest must see the zero-arg signature,
+            # not the wrapped (q, sigma, ...) one (it would hunt fixtures).
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
