@@ -1,4 +1,6 @@
-"""Serve a small LM with batched prefill + KV-cache decode.
+"""Serve a small LM with batched prefill + KV-cache decode, with the logits
+head routed through the quantizer-backend dispatcher's fused LUQ matmul
+(``repro.quant.backend``, backend="pallas" — interpret mode on CPU).
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -9,5 +11,6 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     sys.argv = [sys.argv[0], "--arch", "gemma-7b", "--smoke",
-                "--batch", "2", "--prompt-len", "16", "--gen", "8"]
+                "--batch", "2", "--prompt-len", "16", "--gen", "8",
+                "--quant-fmt", "luq_fp4", "--backend", "pallas"]
     main()

@@ -120,6 +120,11 @@ class QuantConfig:
     quantize_dgrad: bool = True   # paper A.12: quantize inputs of dgrad GEMM
     quantize_wgrad: bool = True   # ... and of wgrad GEMM
     stochastic: bool = True
+    # Execution backend for the quantizers (repro.quant.backend dispatch):
+    # "ref" = pure-jnp formats; "pallas" = fused Pallas kernels (interpret
+    # mode on CPU).  Formats a backend lacks fall back to "ref" explicitly;
+    # the REPRO_QUANT_BACKEND env var overrides this field globally.
+    backend: str = "ref"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +140,11 @@ class DPConfig:
     # whose per-example gradient is itself device-memory-scale).
     microbatch_mode: str = "data_parallel"
     grad_accum_dtype: str = "float32"    # bfloat16 for 1T-scale models
+    # Per-example clip implementation: "ref" = vmap-norms + einsum (the JAX
+    # formulation in dp/clip.py); "fused" = flatten each microbatch's
+    # per-example grads to (B, D) and run the fused Pallas clip+sum kernel
+    # (one HBM pass; incompatible with partial_accum).
+    clip_backend: str = "ref"
     # DPQuant analysis (paper Table 3 defaults)
     analysis_interval: int = 2       # epochs between COMPUTELOSSIMPACT runs
     analysis_reps: int = 2           # R

@@ -14,6 +14,7 @@ from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def global_norm(tree) -> jax.Array:
@@ -36,6 +37,28 @@ def _reshape_micro(batch, n_micro: int, mb: int):
         lambda x: x.reshape((n_micro, mb) + x.shape[1:]), batch)
 
 
+def _fused_clip_sum(grads, mb: int, clip_norm: float, accum_dtype):
+    """Flatten per-example grads to (B, D), run the fused Pallas clip+sum
+    kernel through the backend dispatcher, unflatten the summed row.
+
+    Returns ``(clipped_sum_tree, norms)`` with the same semantics as the ref
+    path: norms are per-example global l2 norms over *all* leaves, the sum
+    is fp32-accumulated then cast to ``accum_dtype``.
+    """
+    from repro.quant import backend as qbackend
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    sizes = [int(np.prod(l.shape[1:])) for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(mb, -1).astype(jnp.float32) for l in leaves], axis=1)
+    clip_impl, _ = qbackend.get_clip_sum("fused")
+    clipped_flat, norms = clip_impl(flat, clip_norm)
+    parts = jnp.split(clipped_flat, list(np.cumsum(sizes))[:-1])
+    clipped = treedef.unflatten(
+        [p.reshape(l.shape[1:]).astype(accum_dtype)
+         for p, l in zip(parts, leaves)])
+    return clipped, norms
+
+
 def per_example_clipped_grad_sum(
     loss_fn: Callable,
     params,
@@ -48,15 +71,25 @@ def per_example_clipped_grad_sum(
     accum_dtype=jnp.float32,
     partial_accum_shards: int = 0,
     constrain_partial: Callable = None,
+    clip_backend: str = "ref",
 ) -> Tuple[object, dict]:
     """Sum over the batch of per-example clipped gradients.
 
     ``loss_fn(params, example, rng)`` must return the scalar loss of ONE
     example (leading batch dim already stripped).
 
+    ``clip_backend`` selects the clip implementation: ``"ref"`` computes
+    norms leaf-by-leaf and reduces with an einsum; ``"fused"`` flattens the
+    microbatch's per-example grads to one (B, D) matrix and runs the fused
+    Pallas per-sample-clip kernel (one pass over the gradient matrix).
+    Both produce identical metrics (norms / clip fraction / loss).
+
     Returns ``(grad_sum, metrics)`` where metrics carries per-example norms
     (paper Fig. 1c diagnostics), clip fraction and mean loss.
     """
+    if clip_backend not in ("ref", "fused"):
+        raise ValueError(f"clip_backend must be 'ref' or 'fused', "
+                         f"got {clip_backend!r}")
     batch_leaves = jax.tree_util.tree_leaves(batch)
     n = batch_leaves[0].shape[0]
     mb = microbatch_size
@@ -78,6 +111,10 @@ def per_example_clipped_grad_sum(
     # mb to be a multiple of the shard count.
     P = partial_accum_shards if (partial_accum_shards
                                  and mb % partial_accum_shards == 0) else 0
+    if P and clip_backend == "fused":
+        raise ValueError("clip_backend='fused' sums the whole microbatch in "
+                         "the kernel and cannot keep per-shard partial "
+                         "sums; disable partial_accum or use 'ref'")
 
     def micro_step(carry, xs):
         acc, loss_acc = carry
@@ -88,6 +125,11 @@ def per_example_clipped_grad_sum(
             l, g = jax.value_and_grad(one_example)(params, ex, r)
             return l, g
         losses, grads = jax.vmap(gl)(mb_batch)
+        if clip_backend == "fused":
+            clipped, norms = _fused_clip_sum(grads, mb, clip_norm,
+                                             accum_dtype)
+            acc = jax.tree_util.tree_map(jnp.add, acc, clipped)
+            return (acc, loss_acc + losses.sum()), norms
         # per-example global norms
         sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)),
                          axis=tuple(range(1, l.ndim)))

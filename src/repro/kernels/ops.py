@@ -77,7 +77,18 @@ def luq_matmul(a: jax.Array, b: jax.Array, key: jax.Array,
                                              "interpret"))
 def clip_and_sum(grads: jax.Array, clip_norm: float, block_d: int = 512,
                  interpret=None):
-    """Fused DP per-example clip + batch sum. grads: (B, D)."""
+    """Fused DP per-example clip + batch sum.
+
+    ``grads``: (B, D) per-example gradient rows, any float dtype, any B >= 1
+    and D >= 1 (D is zero-padded to a ``block_d`` multiple internally —
+    zero columns change neither the row norms nor the sum, and the padding
+    is stripped before returning).
+
+    Returns ``(clipped_sum, norms)`` matching ``ref.per_sample_clip_ref``:
+    ``clipped_sum`` (D,) f32 = sum_b min(1, C/||g_b||) * g[b], and ``norms``
+    (B,) f32 per-example l2 norms (the clip-fraction / grad-norm
+    diagnostics of paper Fig. 1c are computed from these).
+    """
     interpret = _interpret_default() if interpret is None else interpret
     b, d = grads.shape
     pd = (-d) % block_d

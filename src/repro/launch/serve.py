@@ -3,6 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 
+Quantized serving: ``--quant-fmt luq_fp4 --backend pallas`` routes the
+logits head projection through the quantizer-backend dispatcher's fused
+quantize-matmul (``repro.quant.backend`` op ``"matmul"``) — on the pallas
+backend both operands are LUQ-quantized tile-by-tile in VMEM fused with the
+MXU contraction.  ``--backend ref`` runs the same dispatch through the
+pure-jnp quantizers (the numerical reference); ``REPRO_QUANT_BACKEND``
+overrides either.
+
 Uses the host mesh; the full-scale configs are exercised via the dry-run
 (launch/dryrun.py) which lowers the same prefill/decode functions on the
 production mesh.
@@ -31,6 +39,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--quant-fmt", default="none",
+                    help="logits-head quantization format for serving "
+                         "(none | luq_fp4 | int4 | fp8_e4m3 | fp8_e5m2 | "
+                         "bf16)")
+    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
+                    help="quantizer backend for --quant-fmt "
+                         "(REPRO_QUANT_BACKEND overrides)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -38,9 +53,10 @@ def main(argv=None):
            else get_config(args.arch))
     if not cfg.has_decoder:
         raise SystemExit(f"{args.arch} has no decoder; nothing to serve")
-    model = build_model(cfg, QuantConfig(fmt="none"))
+    quant = QuantConfig(fmt=args.quant_fmt, backend=args.backend)
+    model = build_model(cfg, quant)
     mesh = make_host_mesh()
-    run = RunConfig(model=cfg, quant=QuantConfig(fmt="none"),
+    run = RunConfig(model=cfg, quant=quant,
                     dp=DPConfig(enabled=False), optim=OptimConfig())
     cache_len = args.prompt_len + args.gen
     setup = build_serve_setup(model, run, mesh, args.batch, cache_len)

@@ -144,7 +144,8 @@ def build_train_setup(model: Model, run: RunConfig, mesh: Mesh,
                     accum_dtype=accum_dtype,
                     partial_accum_shards=(dp_shards if run.dp.partial_accum
                                           else 0),
-                    constrain_partial=partial_constrain)
+                    constrain_partial=partial_constrain,
+                    clip_backend=run.dp.clip_backend)
                 grads = add_gaussian_noise(
                     grad_sum, clip_norm=run.dp.clip_norm,
                     noise_multiplier=run.dp.noise_multiplier,

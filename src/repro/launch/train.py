@@ -37,6 +37,13 @@ def main(argv=None):
                     choices=["dpquant", "pls", "static"])
     ap.add_argument("--no-dp", action="store_true")
     ap.add_argument("--fmt", default="luq_fp4")
+    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
+                    help="quantizer backend (repro.quant.backend dispatch); "
+                         "REPRO_QUANT_BACKEND overrides")
+    ap.add_argument("--clip-backend", default="ref",
+                    choices=["ref", "fused"],
+                    help="per-example clip path: jnp reference or the fused "
+                         "Pallas clip+sum kernel")
     ap.add_argument("--quant-fraction", type=float, default=0.9)
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--steps-per-epoch", type=int, default=10)
@@ -66,11 +73,12 @@ def main(argv=None):
            else get_config(args.arch))
     run = RunConfig(
         model=cfg,
-        quant=QuantConfig(fmt=args.fmt),
+        quant=QuantConfig(fmt=args.fmt, backend=args.backend),
         dp=DPConfig(enabled=not args.no_dp, clip_norm=args.clip_norm,
                     noise_multiplier=args.noise_multiplier,
                     microbatch_size=args.microbatch,
-                    quant_fraction=args.quant_fraction),
+                    quant_fraction=args.quant_fraction,
+                    clip_backend=args.clip_backend),
         optim=OptimConfig(name=args.optimizer, lr=args.lr),
         global_batch=args.batch, seq_len=args.seq_len,
         steps_per_epoch=args.steps_per_epoch,

@@ -195,11 +195,30 @@ def softmax_xent(logits, labels):
 
 
 # --------------------------------------------------------------------------- #
-# quantized projection helper
+# quantized projection helpers
 # --------------------------------------------------------------------------- #
 def qproj(spec, x, w, *, seed, flag, quant_cfg):
     """Policy-gated quantized einsum (see repro.quant.fake_quant)."""
     return qeinsum(spec, x, w, seed=seed, flag=flag, fmt=quant_cfg.fmt,
                    q_fwd=quant_cfg.quantize_fwd,
                    q_dgrad=quant_cfg.quantize_dgrad,
-                   q_wgrad=quant_cfg.quantize_wgrad)
+                   q_wgrad=quant_cfg.quantize_wgrad,
+                   backend=quant_cfg.backend)
+
+
+def qlogits(h, head, *, quant_cfg, key):
+    """Serving logits projection through the quantizer-backend dispatcher.
+
+    ``h``: (B, d) final hidden states; ``head``: (V, d) output embedding.
+    With ``fmt="none"`` this is the exact fp32 einsum; otherwise both
+    operands go through the dispatcher's fused quantize-matmul (on the
+    pallas backend the LUQ quantization happens tile-by-tile in VMEM fused
+    with the MXU contraction — the serve-path analogue of qeinsum).
+    """
+    h32 = h.astype(jnp.float32)
+    head32 = head.astype(jnp.float32)
+    if quant_cfg is None or quant_cfg.fmt == "none":
+        return jnp.einsum("bd,vd->bv", h32, head32)
+    from repro.quant import backend as qbackend
+    mm, _ = qbackend.get_matmul(quant_cfg.fmt, quant_cfg.backend)
+    return mm(h32, head32.T, key)

@@ -83,7 +83,8 @@ def forward(params, image, qflags, cfg: ModelConfig, quant: QuantConfig):
                        strides=(stride, stride), padding="SAME",
                        fmt=quant.fmt, q_fwd=quant.quantize_fwd,
                        q_dgrad=quant.quantize_dgrad,
-                       q_wgrad=quant.quantize_wgrad)
+                       q_wgrad=quant.quantize_wgrad,
+                       backend=quant.backend)
 
     li = 0
     x = qc(image, params["stem"]["conv"], qflags[li], 11 * li)

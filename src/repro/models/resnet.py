@@ -134,7 +134,8 @@ def forward(params, image, qflags, cfg: ModelConfig, quant: QuantConfig):
                        strides=(stride, stride), padding="SAME",
                        fmt=quant.fmt, q_fwd=quant.quantize_fwd,
                        q_dgrad=quant.quantize_dgrad,
-                       q_wgrad=quant.quantize_wgrad)
+                       q_wgrad=quant.quantize_wgrad,
+                       backend=quant.backend)
 
     x = qc(image, params["stem"]["conv"], qflags[li], 11 * li)
     x = cm.groupnorm(x, params["stem"]["gn"]["scale"],

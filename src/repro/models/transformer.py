@@ -259,7 +259,10 @@ def prefill(params, batch, cfg: ModelConfig, quant: QuantConfig,
         body, x, (params["blocks"], qflags, jnp.arange(cfg.n_layers)))
     h_last = cm.rmsnorm(x[:, -1], params["final_norm"]).astype(jnp.float32)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
-    logits = jnp.einsum("bd,vd->bv", h_last, head.astype(jnp.float32))
+    # even folds = prefill, odd folds = decode (pos==S after prefill, so a
+    # bare fold of the position would reuse the first decode step's key)
+    logits = cm.qlogits(h_last, head, quant_cfg=quant,
+                        key=jax.random.fold_in(jax.random.PRNGKey(17), 2 * S))
     cache = {"k": lc(ks, "layers", "batch", "kv_heads", "kv_seq", "head_dim"),
              "v": lc(vs, "layers", "batch", "kv_heads", "kv_seq", "head_dim"),
              "pos": jnp.asarray(S, jnp.int32)}
@@ -321,7 +324,9 @@ def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
                   jnp.arange(cfg.n_layers)))
     h_last = cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
-    logits = jnp.einsum("bd,vd->bv", h_last, head.astype(jnp.float32))
+    logits = cm.qlogits(h_last, head, quant_cfg=quant,
+                        key=jax.random.fold_in(jax.random.PRNGKey(17),
+                                               2 * pos + 1))
     new_cache = {"k": ks, "v": vs, "pos": pos + 1}
     return logits, new_cache
 

@@ -8,8 +8,19 @@ from repro.quant.formats import (
     STOCHASTIC_FORMATS,
 )
 from repro.quant.fake_quant import qeinsum, qconv2d
+from repro.quant.backend import (
+    BACKENDS,
+    capability_table,
+    get_clip_sum,
+    get_matmul,
+    get_quantizer,
+    resolve_backend,
+    supported,
+)
 
 __all__ = [
     "make_quantizer", "format_bits", "luq_fp4", "int4_uniform",
     "fp8_e4m3", "fp8_e5m2", "STOCHASTIC_FORMATS", "qeinsum", "qconv2d",
+    "BACKENDS", "capability_table", "get_clip_sum", "get_matmul",
+    "get_quantizer", "resolve_backend", "supported",
 ]

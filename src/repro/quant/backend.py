@@ -1,0 +1,187 @@
+"""Quantizer-backend dispatch: (op, format) -> implementation registry.
+
+The quantization stack has two execution backends:
+
+``"ref"``     the pure-jnp quantizers in ``repro.quant.formats`` (default;
+              runs everywhere, the numerical reference),
+``"pallas"``  the fused Pallas TPU kernels wrapped in ``repro.kernels.ops``
+              (interpret mode on CPU, compiled on real TPUs — see
+              ``REPRO_PALLAS_INTERPRET`` in kernels/ops.py).
+
+Three ops are dispatched:
+
+``"quantize"``  ``q(x, key) -> x_q`` — elementwise fake-quantization, the
+                primitive behind ``fake_quant.qeinsum``/``qconv2d``.
+``"matmul"``    ``mm(a, b, key) -> f32`` — quantize-both-operands matmul
+                (serving hot path); the pallas impl quantizes tiles in VMEM
+                fused with the MXU contraction (zero extra HBM traffic).
+``"clip_sum"``  ``cs(grads, clip_norm) -> (clipped_sum, norms)`` — fused DP
+                per-example clip + batch sum over (B, D) gradient rows;
+                format-agnostic (registered under fmt ``"*"``).
+
+Backend selection: the ``REPRO_QUANT_BACKEND`` environment variable
+overrides everything (so CI can force the pallas leg without touching
+configs); otherwise the per-call request (``QuantConfig.backend``) wins;
+otherwise ``"ref"``.  Formats a backend does not implement fall back to
+``"ref"`` *explicitly*: ``get_*`` returns ``(impl, actual_backend)`` so
+callers can see (and tests can assert) where an op really runs.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import formats
+
+ENV_VAR = "REPRO_QUANT_BACKEND"
+DEFAULT_BACKEND = "ref"
+BACKENDS = ("ref", "pallas")
+OPS = ("quantize", "matmul", "clip_sum")
+
+# fmt sentinel for format-agnostic ops (clip_sum)
+ANY_FORMAT = "*"
+
+# (op, fmt, backend) -> impl
+_REGISTRY: Dict[Tuple[str, str, str], Callable] = {}
+
+
+def register(op: str, fmt: str, backend: str, impl: Callable) -> None:
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r} (expected one of {OPS})")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    _REGISTRY[(op, fmt, backend)] = impl
+
+
+def _lookup(op: str, fmt: str, backend: str):
+    impl = _REGISTRY.get((op, fmt, backend))
+    if impl is None:
+        impl = _REGISTRY.get((op, ANY_FORMAT, backend))
+    return impl
+
+
+def supported(op: str, fmt: str, backend: str) -> bool:
+    """Capability check: does ``backend`` natively implement (op, fmt)?"""
+    return _lookup(op, fmt, backend) is not None
+
+
+def resolve_backend(requested: str | None = None) -> str:
+    """Concrete backend name: env override > request > default."""
+    backend = os.environ.get(ENV_VAR) or requested or DEFAULT_BACKEND
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown quant backend {backend!r} (expected one of {BACKENDS}; "
+            f"check {ENV_VAR} / QuantConfig.backend)")
+    return backend
+
+
+def get_impl(op: str, fmt: str, backend: str | None = None):
+    """Resolve (op, fmt) on ``backend`` with explicit ref fallback.
+
+    Returns ``(impl, actual_backend)``; ``actual_backend`` differs from the
+    request when the backend lacks the format and ``"ref"`` filled in.
+    """
+    be = resolve_backend(backend)
+    impl = _lookup(op, fmt, be)
+    if impl is None and be != DEFAULT_BACKEND:
+        impl, be = _lookup(op, fmt, DEFAULT_BACKEND), DEFAULT_BACKEND
+    if impl is None:
+        raise KeyError(f"no implementation for op={op!r} fmt={fmt!r} "
+                       f"on any backend")
+    return impl, be
+
+
+def get_quantizer(fmt: str, backend: str | None = None):
+    """``(q(x, key) -> x_q, actual_backend)``."""
+    return get_impl("quantize", fmt, backend)
+
+
+def get_matmul(fmt: str, backend: str | None = None):
+    """``(mm(a, b, key) -> (M, N) f32, actual_backend)``."""
+    return get_impl("matmul", fmt, backend)
+
+
+def get_clip_sum(backend: str | None = None):
+    """``(cs(grads, clip_norm) -> (clipped_sum, norms), actual_backend)``.
+
+    Accepts the DPConfig spelling ``"fused"`` as an alias for ``"pallas"``.
+    Unlike the quantize/matmul ops, ``REPRO_QUANT_BACKEND`` does NOT apply
+    here: the clip implementation is its own knob (``DPConfig.clip_backend``)
+    and an explicit ``"fused"`` request must not be silently downgraded by
+    an env var meant to pin the quantizers.
+    """
+    if backend == "fused":
+        backend = "pallas"
+    be = backend or DEFAULT_BACKEND
+    if be not in BACKENDS:
+        raise ValueError(f"unknown clip backend {be!r} "
+                         f"(expected one of {BACKENDS})")
+    impl = _lookup("clip_sum", ANY_FORMAT, be)
+    if impl is None:
+        raise KeyError(f"no clip_sum implementation on backend {be!r}")
+    return impl, be
+
+
+def capability_table() -> Dict[str, Dict[str, Tuple[str, ...]]]:
+    """{op: {backend: (natively supported formats...)}} — docs/tests."""
+    table: Dict[str, Dict[str, list]] = {op: {b: [] for b in BACKENDS}
+                                         for op in OPS}
+    for (op, fmt, backend) in _REGISTRY:
+        table[op][backend].append(fmt)
+    return {op: {b: tuple(sorted(fmts)) for b, fmts in row.items()}
+            for op, row in table.items()}
+
+
+# --------------------------------------------------------------------------- #
+# ref backend: the pure-jnp formats (every format, every op)
+# --------------------------------------------------------------------------- #
+def _ref_matmul(fmt: str) -> Callable:
+    q = formats.make_quantizer(fmt)
+
+    def mm(a, b, key):
+        ka, kb = jax.random.split(key)
+        aq = q(a, ka).astype(jnp.float32)
+        bq = q(b, kb).astype(jnp.float32)
+        return aq @ bq
+
+    return mm
+
+
+def _ref_clip_sum(grads, clip_norm):
+    from repro.kernels.ref import per_sample_clip_ref
+    return per_sample_clip_ref(grads, clip_norm)
+
+
+for _fmt in formats._FORMATS:
+    register("quantize", _fmt, "ref", formats.make_quantizer(_fmt))
+    register("matmul", _fmt, "ref", _ref_matmul(_fmt))
+register("clip_sum", ANY_FORMAT, "ref", _ref_clip_sum)
+
+
+# --------------------------------------------------------------------------- #
+# pallas backend: the fused TPU kernels (LUQ-FP4 only; clip is any-format)
+# --------------------------------------------------------------------------- #
+# Kernel wrappers are imported lazily inside the impls: repro.kernels pulls
+# repro.quant.formats back in, and deferring the import keeps package init
+# order-independent.
+def _pallas_quantize(x, key):
+    from repro.kernels.ops import luq_quantize
+    return luq_quantize(x, key)
+
+
+def _pallas_matmul(a, b, key):
+    from repro.kernels.ops import luq_matmul
+    return luq_matmul(a, b, key)
+
+
+def _pallas_clip_sum(grads, clip_norm):
+    from repro.kernels.ops import clip_and_sum
+    return clip_and_sum(grads, float(clip_norm))
+
+
+register("quantize", "luq_fp4", "pallas", _pallas_quantize)
+register("matmul", "luq_fp4", "pallas", _pallas_matmul)
+register("clip_sum", ANY_FORMAT, "pallas", _pallas_clip_sum)

@@ -17,7 +17,13 @@ never triggers recompilation (flags are just inputs).
 
 Randomness: stochastic formats consume explicit uint32 seeds; each GEMM input
 gets an independent fold so forward/dgrad/wgrad re-quantizations are
-independent draws, as in LUQ.
+independent draws, as in LUQ.  ``seed`` and ``fold`` are folded into the key
+*separately* — a combined ``seed + fold`` would make (seed=s, fold=1) collide
+with (seed=s+1, fold=0), correlating draws across adjacent steps/GEMMs.
+
+``backend`` selects the quantizer implementation through
+``repro.quant.backend`` ("ref" jnp formats or the "pallas" fused kernels);
+the ``REPRO_QUANT_BACKEND`` env var overrides it globally.
 """
 from __future__ import annotations
 
@@ -27,24 +33,27 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.quant import formats
+from repro.quant import backend as qbackend
 
 
-def _maybe_quant(x, seed: jax.Array, fold: int, fmt: str, flag: jax.Array):
+def _maybe_quant(x, seed: jax.Array, fold: int, fmt: str, flag: jax.Array,
+                 backend: str = "ref"):
     """Quantize ``x`` when ``flag > 0.5``, else pass through. ``seed`` uint32."""
     if fmt == "none":
         return x
-    q = formats.make_quantizer(fmt)
+    q, _ = qbackend.get_quantizer(fmt, backend)
 
     def do_q(v):
-        key = jax.random.fold_in(jax.random.PRNGKey(0), seed + fold)
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), seed), fold)
         return q(v, key)
 
     return jax.lax.cond(flag > 0.5, do_q, lambda v: v, x)
 
 
 @functools.lru_cache(maxsize=None)
-def _make_qeinsum(spec: str, fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool):
+def _make_qeinsum(spec: str, fmt: str, q_fwd: bool, q_dgrad: bool,
+                  q_wgrad: bool, backend: str):
     """Build a custom-VJP einsum with quantized fwd/dgrad/wgrad GEMM inputs."""
 
     def einsum(x, w):
@@ -52,8 +61,8 @@ def _make_qeinsum(spec: str, fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool
 
     @jax.custom_vjp
     def qeinsum(x, w, seed, flag):
-        xq = _maybe_quant(x, seed, 0, fmt, flag) if q_fwd else x
-        wq = _maybe_quant(w, seed, 1, fmt, flag) if q_fwd else w
+        xq = _maybe_quant(x, seed, 0, fmt, flag, backend) if q_fwd else x
+        wq = _maybe_quant(w, seed, 1, fmt, flag, backend) if q_fwd else w
         return einsum(xq, wq)
 
     def fwd(x, w, seed, flag):
@@ -62,13 +71,13 @@ def _make_qeinsum(spec: str, fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool
     def bwd(res, g):
         x, w, seed, flag = res
         # dgrad: dx = GEMM(Q(g), Q(w)) via the transpose of y = einsum(x, w).
-        wq = _maybe_quant(w, seed, 2, fmt, flag) if q_dgrad else w
-        gq_d = _maybe_quant(g, seed, 3, fmt, flag) if q_dgrad else g
+        wq = _maybe_quant(w, seed, 2, fmt, flag, backend) if q_dgrad else w
+        gq_d = _maybe_quant(g, seed, 3, fmt, flag, backend) if q_dgrad else g
         dx_fn = jax.linear_transpose(lambda t: einsum(t, wq), x)
         (dx,) = dx_fn(gq_d)
         # wgrad: dw = GEMM(Q(x), Q(g)).
-        xq = _maybe_quant(x, seed, 4, fmt, flag) if q_wgrad else x
-        gq_w = _maybe_quant(g, seed, 5, fmt, flag) if q_wgrad else g
+        xq = _maybe_quant(x, seed, 4, fmt, flag, backend) if q_wgrad else x
+        gq_w = _maybe_quant(g, seed, 5, fmt, flag, backend) if q_wgrad else g
         dw_fn = jax.linear_transpose(lambda t: einsum(xq, t), w)
         (dw,) = dw_fn(gq_w)
         return dx, dw, None, None
@@ -79,9 +88,13 @@ def _make_qeinsum(spec: str, fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool
 
 def qeinsum(spec: str, x: jax.Array, w: jax.Array, *, seed: jax.Array,
             flag: jax.Array, fmt: str = "luq_fp4",
-            q_fwd: bool = True, q_dgrad: bool = True, q_wgrad: bool = True):
+            q_fwd: bool = True, q_dgrad: bool = True, q_wgrad: bool = True,
+            backend: str = None):
     """Quantization-aware einsum. ``flag`` and ``seed`` are traced scalars."""
-    fn = _make_qeinsum(spec, fmt, q_fwd, q_dgrad, q_wgrad)
+    # Resolve env override *before* the lru_cache key so flipping
+    # REPRO_QUANT_BACKEND mid-process cannot serve a stale closure.
+    backend = qbackend.resolve_backend(backend)
+    fn = _make_qeinsum(spec, fmt, q_fwd, q_dgrad, q_wgrad, backend)
     seed = jnp.asarray(seed, jnp.uint32)
     flag = jnp.asarray(flag, jnp.float32)
     return fn(x, w, seed, flag)
@@ -89,7 +102,7 @@ def qeinsum(spec: str, x: jax.Array, w: jax.Array, *, seed: jax.Array,
 
 @functools.lru_cache(maxsize=None)
 def _make_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
-                strides: tuple, padding: str, dnums_key: tuple):
+                strides: tuple, padding: str, dnums_key: tuple, backend: str):
     dn = jax.lax.ConvDimensionNumbers(*dnums_key)
 
     def conv(x, w):
@@ -98,8 +111,8 @@ def _make_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
 
     @jax.custom_vjp
     def qconv(x, w, seed, flag):
-        xq = _maybe_quant(x, seed, 0, fmt, flag) if q_fwd else x
-        wq = _maybe_quant(w, seed, 1, fmt, flag) if q_fwd else w
+        xq = _maybe_quant(x, seed, 0, fmt, flag, backend) if q_fwd else x
+        wq = _maybe_quant(w, seed, 1, fmt, flag, backend) if q_fwd else w
         return conv(xq, wq)
 
     def fwd(x, w, seed, flag):
@@ -107,12 +120,12 @@ def _make_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
 
     def bwd(res, g):
         x, w, seed, flag = res
-        wq = _maybe_quant(w, seed, 2, fmt, flag) if q_dgrad else w
-        gq_d = _maybe_quant(g, seed, 3, fmt, flag) if q_dgrad else g
+        wq = _maybe_quant(w, seed, 2, fmt, flag, backend) if q_dgrad else w
+        gq_d = _maybe_quant(g, seed, 3, fmt, flag, backend) if q_dgrad else g
         dx_fn = jax.linear_transpose(lambda t: conv(t, wq), x)
         (dx,) = dx_fn(gq_d)
-        xq = _maybe_quant(x, seed, 4, fmt, flag) if q_wgrad else x
-        gq_w = _maybe_quant(g, seed, 5, fmt, flag) if q_wgrad else g
+        xq = _maybe_quant(x, seed, 4, fmt, flag, backend) if q_wgrad else x
+        gq_w = _maybe_quant(g, seed, 5, fmt, flag, backend) if q_wgrad else g
         dw_fn = jax.linear_transpose(lambda t: conv(xq, t), w)
         (dw,) = dw_fn(gq_w)
         return dx, dw, None, None
@@ -123,12 +136,14 @@ def _make_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
 
 def qconv2d(x: jax.Array, w: jax.Array, *, seed: jax.Array, flag: jax.Array,
             strides=(1, 1), padding="SAME", fmt: str = "luq_fp4",
-            q_fwd: bool = True, q_dgrad: bool = True, q_wgrad: bool = True):
+            q_fwd: bool = True, q_dgrad: bool = True, q_wgrad: bool = True,
+            backend: str = None):
     """Quantization-aware NHWC conv2d (weights HWIO)."""
+    backend = qbackend.resolve_backend(backend)
     dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
                                         ("NHWC", "HWIO", "NHWC"))
     fn = _make_qconv(fmt, q_fwd, q_dgrad, q_wgrad, tuple(strides), padding,
-                     tuple(dn))
+                     tuple(dn), backend)
     seed = jnp.asarray(seed, jnp.uint32)
     flag = jnp.asarray(flag, jnp.float32)
     return fn(x, w, seed, flag)

@@ -70,6 +70,15 @@ class Trainer:
         self.eval_dataset = eval_dataset
         self.eval_fn = eval_fn
         self.mode = mode
+        # Fail fast on backend knobs: the dispatch happens at trace time
+        # deep inside the jitted step, where a typo'd backend name would
+        # surface as an opaque tracer error.  Both epoch executors run the
+        # same step_fn, so scan/loop are interchangeable on any backend.
+        from repro.quant.backend import resolve_backend
+        resolve_backend(run.quant.backend)
+        if run.dp.clip_backend not in ("ref", "fused"):
+            raise ValueError(f"dp.clip_backend must be 'ref' or 'fused', "
+                             f"got {run.dp.clip_backend!r}")
         self.model: Model = build_model(run.model, run.quant)
         self.mesh = mesh or make_host_mesh()
         self.setup = build_train_setup(self.model, run, self.mesh)

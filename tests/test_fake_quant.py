@@ -92,6 +92,34 @@ def test_vmap_per_example_grads():
     assert np.isfinite(np.asarray(g)).all()
 
 
+def test_rng_folds_distinct_within_step_and_across_seeds():
+    """Regression for the fold collision: ``fold_in(key, seed + fold)`` made
+    (seed=s, fold=1) collide with (seed=s+1, fold=0), correlating the
+    quantization draws of adjacent steps/GEMMs.  Seed and fold must be
+    folded separately, giving six distinct GEMM-input draws per step and no
+    overlap between consecutive seeds."""
+    from repro.quant.fake_quant import _maybe_quant
+    x = jax.random.normal(jax.random.PRNGKey(9), (64, 64))
+    flag = jnp.float32(1.0)
+
+    def draw(seed, fold):
+        return np.asarray(_maybe_quant(x, jnp.uint32(seed), fold,
+                                       "luq_fp4", flag))
+
+    # the six GEMM-input folds of one step are pairwise distinct draws
+    step_draws = [draw(5, f) for f in range(6)]
+    for i in range(6):
+        for j in range(i + 1, 6):
+            assert not np.array_equal(step_draws[i], step_draws[j]), (i, j)
+    # and no draw of seed s+1 collides with any draw of seed s
+    next_draws = [draw(6, f) for f in range(6)]
+    for i, a in enumerate(step_draws):
+        for j, b in enumerate(next_draws):
+            assert not np.array_equal(a, b), (i, j)
+    # determinism: same (seed, fold) -> identical draw
+    np.testing.assert_array_equal(draw(5, 3), draw(5, 3))
+
+
 def test_flag_switch_no_recompile():
     """Policy flips are traced values — one compilation serves both."""
     x = jnp.ones((4, 8))

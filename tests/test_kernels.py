@@ -85,3 +85,34 @@ def test_clip_and_sum_wrapper_pads():
     np.testing.assert_allclose(np.asarray(norms), np.asarray(wn), rtol=1e-4)
     np.testing.assert_allclose(np.asarray(s), np.asarray(ws), rtol=1e-4,
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("b,d,block_d", [
+    (1, 333, 512),    # B=1, D below one block
+    (1, 512, 512),    # B=1, D exactly one block
+    (4, 513, 512),    # D one past a block boundary
+    (2, 1500, 512),   # D spanning several blocks, not a multiple
+    (1, 1, 512),      # degenerate single-element gradient
+    (3, 700, 256),    # non-default block size
+])
+def test_clip_and_sum_shape_edge_cases(b, d, block_d):
+    """clip_and_sum's padding/unpadding contract: (B, D) in ->
+    ((D,), (B,)) out matching the ref for any B >= 1 and D not a multiple
+    of block_d."""
+    g = jax.random.normal(jax.random.PRNGKey(7), (b, d), jnp.float32) * 3.0
+    s, norms = clip_and_sum(g, 1.0, block_d=block_d)
+    assert s.shape == (d,) and norms.shape == (b,)
+    ws, wn = ref.per_sample_clip_ref(g, 1.0)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(wn), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ws), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_kernels_package_exports():
+    """The public wrappers and raw kernels are importable from the package
+    root (the dispatcher and external callers rely on these names)."""
+    import repro.kernels as K
+    for name in ("luq_quantize", "luq_matmul", "clip_and_sum",
+                 "luq_quant_2d", "quant_matmul", "per_sample_clip", "ref"):
+        assert hasattr(K, name), name
+        assert name in K.__all__, name
