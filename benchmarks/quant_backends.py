@@ -25,6 +25,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import time
 
 import numpy as np
@@ -95,7 +96,16 @@ def main(argv=None):
         },
     }
 
+    env_override = os.environ.get("REPRO_QUANT_BACKEND")
+    if env_override:
+        # resolve_backend lets the env var beat QuantConfig.backend, so
+        # both legs would silently run the same backend
+        print(f"warning: REPRO_QUANT_BACKEND={env_override!r} is set and "
+              "overrides both legs; unset it for a real ref-vs-pallas "
+              "comparison (the JSON records the override)")
+
     payload = {"benchmark": "quant_backends",
+               "env_backend_override": env_override,
                "note": ("pallas runs in Pallas interpret mode on CPU "
                         "(grid emulated with XLA ops); ratios > 1 vs ref "
                         "are expected off-TPU"),

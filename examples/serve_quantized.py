@@ -1,6 +1,10 @@
-"""Serve a small LM with batched prefill + KV-cache decode, with the logits
-head routed through the quantizer-backend dispatcher's fused LUQ matmul
-(``repro.quant.backend``, backend="pallas" — interpret mode on CPU).
+"""Quantized continuous-batching serving demo.
+
+Serves a small LM with the slot-pool engine (``repro.serve``): requests are
+admitted into free slots, decoded in one fused masked step per tick, and
+the logits head routes through the quantizer-backend dispatcher's fused
+LUQ matmul (``repro.quant.backend``, backend="pallas" — interpret mode on
+CPU).  Compare with ``--engine oneshot`` to see the lockstep reference.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -11,6 +15,7 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     sys.argv = [sys.argv[0], "--arch", "gemma-7b", "--smoke",
-                "--batch", "2", "--prompt-len", "16", "--gen", "8",
+                "--engine", "continuous", "--slots", "2", "--requests", "4",
+                "--prompt-len", "16", "--gen", "8",
                 "--quant-fmt", "luq_fp4", "--backend", "pallas"]
     main()

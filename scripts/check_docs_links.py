@@ -1,0 +1,123 @@
+"""Markdown link checker for README.md and docs/ (no external deps).
+
+Validates every inline markdown link/image in the given files/directories:
+
+* relative paths must exist on disk (resolved from the linking file),
+* ``#anchors`` — bare or on a relative ``.md`` target — must match a
+  heading in the target file (GitHub-style slugification),
+* ``http(s)://`` / ``mailto:`` links are skipped (CI has no network).
+
+Usage (CI docs job and tests/test_docs.py):
+
+    python scripts/check_docs_links.py README.md docs
+
+Exits 1 and prints one line per broken link otherwise.
+"""
+from __future__ import annotations
+
+import functools
+import re
+import sys
+from pathlib import Path
+
+# inline links/images: [text](target) — stops at the first unescaped ')'
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+_CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)          # strip code spans
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # strip links
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def md_anchors(path: Path) -> frozenset:
+    """All heading anchors of a markdown file (outside code fences)."""
+    anchors, counts = set(), {}
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if _CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING_RE.match(line)
+        if m:
+            slug = github_slug(m.group(1))
+            n = counts.get(slug, 0)
+            counts[slug] = n + 1
+            anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return frozenset(anchors)
+
+
+def iter_links(path: Path):
+    """Yield link targets of a markdown file (outside code fences)."""
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if _CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK_RE.finditer(line):
+            yield m.group(1)
+
+
+def check_file(path: Path) -> list:
+    """Return a list of broken-link descriptions for one markdown file."""
+    errors = []
+    for target in iter_links(path):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:] not in md_anchors(path):
+                errors.append(f"{path}: broken anchor {target!r}")
+            continue
+        rel, _, anchor = target.partition("#")
+        dest = (path.parent / rel).resolve()
+        if not dest.exists():
+            errors.append(f"{path}: missing target {target!r}")
+            continue
+        if anchor:
+            if dest.suffix != ".md":
+                errors.append(f"{path}: anchor on non-markdown {target!r}")
+            elif anchor not in md_anchors(dest):
+                errors.append(f"{path}: broken anchor {target!r}")
+    return errors
+
+
+def collect(args) -> list:
+    """Expand CLI args (files or directories) into markdown files."""
+    files = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files += sorted(p.rglob("*.md"))
+        else:
+            files.append(p)
+    return files
+
+
+def main(argv=None) -> int:
+    """Check every file/dir given on the command line; 0 = all links ok."""
+    args = argv if argv is not None else sys.argv[1:]
+    if not args:
+        args = ["README.md", "docs"]
+    errors = []
+    files = collect(args)
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

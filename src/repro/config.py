@@ -174,6 +174,29 @@ class OptimConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching serving engine knobs (see docs/SERVING.md).
+
+    The engine allocates one fixed ``max_slots x max_seq`` KV cache up
+    front; requests are admitted into free slots as they arrive and retire
+    independently, so the decode batch stays full under mixed lengths.
+    (The continuous-vs-oneshot choice is a CLI/benchmark concern —
+    ``launch/serve.py --engine`` — not engine state.)
+    """
+    max_slots: int = 8               # decode batch width (slot pool size)
+    max_seq: int = 256               # per-slot KV cache length
+    max_new_tokens: int = 32         # default per-request generation budget
+    temperature: float = 0.0         # 0 = greedy; >0 = per-slot sampling
+    seed: int = 0                    # base of the sampling key schedule
+
+    def __post_init__(self):
+        if self.max_slots < 1:
+            raise ValueError("ServeConfig.max_slots must be >= 1")
+        if self.max_seq < 2:
+            raise ValueError("ServeConfig.max_seq must be >= 2")
+
+
+@dataclasses.dataclass(frozen=True)
 class MeshConfig:
     multi_pod: bool = False
     # axis sizes follow the production mesh in launch/mesh.py

@@ -1,41 +1,121 @@
-"""Serving driver: batched prefill + decode with a KV cache.
+"""Serving CLI: continuous-batching engine or the oneshot reference driver.
 
+    # continuous batching (default engine)
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+        --engine continuous --slots 4 --requests 8 --prompt-len 32 --gen 16
+
+    # legacy oneshot driver (fixed batch, lockstep decode) — kept as the
+    # equivalence reference for the engine
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --smoke \
+        --engine oneshot --batch 4 --prompt-len 32 --gen 16
 
 Quantized serving: ``--quant-fmt luq_fp4 --backend pallas`` routes the
-logits head projection through the quantizer-backend dispatcher's fused
-quantize-matmul (``repro.quant.backend`` op ``"matmul"``) — on the pallas
-backend both operands are LUQ-quantized tile-by-tile in VMEM fused with the
-MXU contraction.  ``--backend ref`` runs the same dispatch through the
-pure-jnp quantizers (the numerical reference); ``REPRO_QUANT_BACKEND``
-overrides either.
+logits head through the quantizer-backend dispatcher's fused
+quantize-matmul (``repro.quant.backend``) on either engine;
+``REPRO_QUANT_BACKEND`` overrides ``--backend``.  See docs/SERVING.md for
+the engine's slot lifecycle and docs/QUANTIZATION.md for the dispatch
+rules.
 
-Uses the host mesh; the full-scale configs are exercised via the dry-run
-(launch/dryrun.py) which lowers the same prefill/decode functions on the
-production mesh.
+The engine logic lives in ``repro.serve``; this module only parses flags,
+builds the model, and prints results.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import QuantConfig, RunConfig, DPConfig, OptimConfig
+from repro.config import (DPConfig, OptimConfig, QuantConfig, RunConfig,
+                          ServeConfig)
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import build_serve_setup
 from repro.models.registry import build_model
+from repro.serve import ContinuousEngine, build_oneshot_fns, oneshot_generate
+
+
+def _random_prompt(key, length: int, vocab: int) -> np.ndarray:
+    return np.asarray(jax.random.randint(key, (length,), 0, vocab),
+                      np.int32)
+
+
+def _random_batch(model, key, batch: int, prompt_len: int) -> dict:
+    """Synthetic inputs for every key the model's batch_spec declares
+    (int32 -> token ids, float -> gaussian; vlm/encdec need both)."""
+    out = {}
+    for k, sds in model.batch_spec(batch, prompt_len).items():
+        if sds.dtype == jnp.int32:
+            out[k] = jax.random.randint(jax.random.fold_in(key, 1),
+                                        sds.shape, 0,
+                                        model.config.vocab_size)
+        else:
+            out[k] = jax.random.normal(jax.random.fold_in(key, 2),
+                                       sds.shape, sds.dtype)
+    return out
+
+
+def run_oneshot(model, params, mesh, run, args) -> None:
+    """Legacy path: one fixed batch, synchronous prefill, lockstep decode."""
+    cache_len = args.prompt_len + args.gen
+    prefill, decode = build_oneshot_fns(model, run, mesh, args.batch,
+                                        cache_len)
+    key = jax.random.PRNGKey(args.seed)
+    batch = _random_batch(model, key, args.batch, args.prompt_len)
+    gen, timings = oneshot_generate(prefill, decode, params, batch, args.gen,
+                                    temperature=args.temperature,
+                                    base_key=key)
+    print(f"prefill: {timings['prefill_s']*1e3:.1f} ms "
+          f"for {args.batch}x{args.prompt_len}")
+    print(f"decode:  {timings['decode_s']*1e3:.1f} ms for {args.gen-1} steps "
+          f"({(args.gen-1)*args.batch/max(timings['decode_s'],1e-9):.1f} "
+          f"tok/s)")
+    print("generated token ids:\n", gen)
+
+
+def run_continuous(model, params, args) -> None:
+    """Continuous-batching path: slot-pool engine with FCFS admission."""
+    serve = ServeConfig(max_slots=args.slots,
+                        max_seq=args.prompt_len + args.gen,
+                        max_new_tokens=args.gen,
+                        temperature=args.temperature, seed=args.seed)
+    engine = ContinuousEngine(model, params, serve)
+    key = jax.random.PRNGKey(args.seed)
+    n_requests = args.requests or args.slots
+    for i in range(n_requests):
+        engine.submit(_random_prompt(jax.random.fold_in(key, 1 + i),
+                                     args.prompt_len,
+                                     model.config.vocab_size),
+                      max_new_tokens=args.gen)
+    results = engine.run()
+    summary = engine.metrics.summary()
+    print(f"served {summary['n_requests']} requests / "
+          f"{summary['total_new_tokens']} new tokens in "
+          f"{summary['run_wall_s']*1e3:.1f} ms "
+          f"({summary['tokens_per_sec']:.1f} tok/s, "
+          f"{summary['decode_ticks']} decode ticks)")
+    print(f"latency p50/p99: {summary['latency_p50_s']*1e3:.1f}/"
+          f"{summary['latency_p99_s']*1e3:.1f} ms; "
+          f"ttft p50: {summary['ttft_p50_s']*1e3:.1f} ms")
+    for rid in sorted(results):
+        print(f"request {rid}: {results[rid].tokens.tolist()}")
 
 
 def main(argv=None):
+    """Parse flags, build the model, and dispatch to the chosen engine."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "oneshot"],
+                    help="continuous = slot-pool engine (repro.serve); "
+                         "oneshot = legacy fixed-batch lockstep driver")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="oneshot: fixed batch size")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous: slot-pool size (decode batch width)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="continuous: number of requests (0 = --slots)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -55,48 +135,23 @@ def main(argv=None):
         raise SystemExit(f"{args.arch} has no decoder; nothing to serve")
     quant = QuantConfig(fmt=args.quant_fmt, backend=args.backend)
     model = build_model(cfg, quant)
-    mesh = make_host_mesh()
-    run = RunConfig(model=cfg, quant=quant,
-                    dp=DPConfig(enabled=False), optim=OptimConfig())
-    cache_len = args.prompt_len + args.gen
-    setup = build_serve_setup(model, run, mesh, args.batch, cache_len)
-    prefill = jax.jit(setup.prefill_fn)
-    decode = jax.jit(setup.decode_fn)
+    params = model.init(jax.random.PRNGKey(args.seed))
 
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
-    batch = {}
-    for k, sds in model.batch_spec(args.batch, args.prompt_len).items():
-        if sds.dtype == jnp.int32:
-            batch[k] = jax.random.randint(jax.random.fold_in(key, 1),
-                                          sds.shape, 0, cfg.vocab_size)
-        else:
-            batch[k] = jax.random.normal(jax.random.fold_in(key, 2),
-                                         sds.shape, sds.dtype)
+    engine = args.engine
+    if engine == "continuous" and model.decode_slots is None:
+        # only the dense transformer implements slot decoding so far;
+        # other decoder families keep working through the legacy driver
+        print(f"note: {cfg.family!r} has no continuous-batching support "
+              "yet; falling back to --engine oneshot")
+        engine = "oneshot"
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    generated = [np.asarray(tok)]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, cache, tok)
-        if args.temperature > 0:
-            k = jax.random.fold_in(key, 100 + i)
-            tok = jax.random.categorical(
-                k, logits / args.temperature).astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        generated.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    gen = np.stack(generated, 1)
-    print(f"prefill: {t_prefill*1e3:.1f} ms for {args.batch}x{args.prompt_len}")
-    print(f"decode:  {t_decode*1e3:.1f} ms for {args.gen-1} steps "
-          f"({(args.gen-1)*args.batch/max(t_decode,1e-9):.1f} tok/s)")
-    print("generated token ids:\n", gen)
+    if engine == "oneshot":
+        mesh = make_host_mesh()
+        run = RunConfig(model=cfg, quant=quant,
+                        dp=DPConfig(enabled=False), optim=OptimConfig())
+        run_oneshot(model, params, mesh, run, args)
+    else:
+        run_continuous(model, params, args)
 
 
 if __name__ == "__main__":

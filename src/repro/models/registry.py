@@ -26,6 +26,12 @@ class Model:
     decode_step: Optional[Callable] = None   # (params, cache, token) -> (logits, cache)
     cache_spec: Optional[Callable] = None    # (batch, seq) -> cache ShapeDtypeStructs
     cache_axes: Optional[Callable] = None
+    # continuous-batching serving (slot-pool cache; see repro.serve.engine):
+    # decode_slots(params, cache, tokens, active) -> (logits, cache) where
+    # cache["pos"] is a per-slot (K,) position vector and ``active`` masks
+    # which slots advance this tick.
+    decode_slots: Optional[Callable] = None
+    slot_cache_spec: Optional[Callable] = None  # (n_slots, max_seq) -> specs
 
     @property
     def n_policy_layers(self) -> int:

@@ -270,7 +270,14 @@ def prefill(params, batch, cfg: ModelConfig, quant: QuantConfig,
 
 
 def decode_attend(q, k_cache, v_cache, pos, cfg: ModelConfig):
-    """One-token GQA attention against a (B, KV, S, hd) cache."""
+    """One-token GQA attention against a (B, KV, S, hd) cache.
+
+    ``pos`` is either a scalar (lockstep decode: every row sits at the same
+    position) or a (B,) vector of per-slot positions (continuous batching:
+    each slot attends to its own prefix only).  Cache entries beyond a row's
+    position are masked to exactly zero probability, so a zero-padded cache
+    of any length yields bit-identical attention output.
+    """
     B, hp, hd = q.shape
     kv = cfg.n_kv_heads
     g = hp // kv
@@ -278,36 +285,45 @@ def decode_attend(q, k_cache, v_cache, pos, cfg: ModelConfig):
     scale = 1.0 / math.sqrt(cfg.head_dim)
     scores = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
                         k_cache.astype(jnp.float32)) * scale
-    valid = (jnp.arange(k_cache.shape[2]) <= pos)[None, None, None, :]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    valid = (jnp.arange(k_cache.shape[2])[None, None, None, :]
+             <= pos_b[:, None, None, None])
     scores = jnp.where(valid, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bkgs,bksd->bkgd", probs.astype(v_cache.dtype), v_cache)
     return ctx.reshape(B, hp, hd)
 
 
-def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
-    """Append one token; returns (logits, new cache)."""
+def _decode_trunk(params, cache, token, pos, cfg: ModelConfig):
+    """Shared one-token transformer trunk for lockstep and slot decode.
+
+    ``pos`` is a (B,) per-row position vector (lockstep decode broadcasts
+    its scalar); each row's KV is written at its own position and attends
+    to its own prefix.  Returns the final-norm hidden states (B, d) f32
+    and the updated (ks, vs) stacks — the logits-head key schedule is the
+    one place the two decode modes legitimately differ, so it stays with
+    the callers.
+    """
     cd = jnp.dtype(cfg.compute_dtype)
-    B = token.shape[0]
-    pos = cache["pos"]
     x = jnp.take(params["embed"], token, axis=0).astype(cd)
     if cfg.family == "dense_lm":
         x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = pos[:, None]                             # (B, 1)
+
+    # per-row cache write: (KV, S, hd) gets a (KV, 1, hd) slab at pos_i
+    write = jax.vmap(
+        lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0)))
 
     def body(carry, xs):
-        blk, kc, vc, lidx = xs
+        blk, kc, vc = xs
         h = cm.rmsnorm(carry, blk["attn_norm"]).astype(cd)
         q = jnp.einsum("bd,dhk->bhk", h, blk["wq"].astype(cd))
         k = jnp.einsum("bd,dhk->bhk", h, blk["wk"].astype(cd))
         v = jnp.einsum("bd,dhk->bhk", h, blk["wv"].astype(cd))
         q = cm.rope(q[:, None], positions, cfg.rope_theta)[:, 0]
         k = cm.rope(k[:, None], positions, cfg.rope_theta)[:, 0]
-        # k, v: (B, KV, hd) -> write (B, KV, 1, hd) slab at sequence pos
-        kc = jax.lax.dynamic_update_slice(
-            kc, k[:, :, None, :].astype(kc.dtype), (0, 0, pos, 0))
-        vc = jax.lax.dynamic_update_slice(
-            vc, v[:, :, None, :].astype(vc.dtype), (0, 0, pos, 0))
+        kc = write(kc, k[:, :, None, :].astype(kc.dtype), pos)
+        vc = write(vc, v[:, :, None, :].astype(vc.dtype), pos)
         ctx = decode_attend(q, kc, vc, pos, cfg)
         attn_out = jnp.einsum("bhk,hkd->bd", ctx.astype(cd),
                               blk["wo"].astype(cd))
@@ -320,14 +336,77 @@ def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
         return x2, (kc, vc)
 
     x, (ks, vs) = jax.lax.scan(
-        body, x, (params["blocks"], cache["k"], cache["v"],
-                  jnp.arange(cfg.n_layers)))
-    h_last = cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32)
+        body, x, (params["blocks"], cache["k"], cache["v"]))
+    return cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32), ks, vs
+
+
+def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
+    """Append one token; returns (logits, new cache)."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    h_last, ks, vs = _decode_trunk(params, cache, token,
+                                   jnp.full((B,), pos, jnp.int32), cfg)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
     logits = cm.qlogits(h_last, head, quant_cfg=quant,
                         key=jax.random.fold_in(jax.random.PRNGKey(17),
                                                2 * pos + 1))
     new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# continuous batching: slot-pool cache + fused masked decode
+# --------------------------------------------------------------------------- #
+def slot_cache_spec(cfg: ModelConfig, n_slots: int, max_seq: int):
+    """Slot-pool KV cache: like ``kv_cache_spec`` but with per-slot positions.
+
+    The batch axis indexes *slots* (not requests); ``pos`` is a (n_slots,)
+    vector so every slot tracks its own sequence length, which is what lets
+    requests of different lengths share one fused decode step.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    L, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((L, n_slots, kv, max_seq, hd), cd),
+        "v": jax.ShapeDtypeStruct((L, n_slots, kv, max_seq, hd), cd),
+        "pos": jax.ShapeDtypeStruct((n_slots,), jnp.int32),
+    }
+
+
+def decode_slots(params, cache, tokens, active, cfg: ModelConfig,
+                 quant: QuantConfig):
+    """One fused decode tick across all slots at per-slot positions.
+
+    ``tokens``: (K,) int32 last token of each slot; ``active``: (K,) bool —
+    only active slots advance their position (inactive rows still flow
+    through the batched GEMMs, but their cache writes land at a stale
+    position that is either masked by ``decode_attend`` or overwritten by
+    the next admission's prefill, so they cannot perturb live slots).
+
+    For a slot at position ``p`` this computes exactly what ``decode_step``
+    computes for a row of a lockstep batch at ``pos == p`` (they share
+    ``_decode_trunk``); the quantized-logits key ``fold_in(PRNGKey(17),
+    2p + 1)`` is evaluated per slot on its own (1, d) hidden row so the
+    draw is bit-identical to the oneshot driver's.
+    """
+    pos = cache["pos"]                                   # (K,)
+    h_last, ks, vs = _decode_trunk(params, cache, tokens, pos, cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+    if quant is None or quant.fmt == "none":
+        logits = cm.qlogits(h_last, head, quant_cfg=quant,
+                            key=jax.random.PRNGKey(0))   # key unused
+    else:
+        # per-slot quantized logits: each slot's (1, d) row goes through
+        # the dispatcher with its own position-derived key, matching the
+        # oneshot decode_step draw for that position bit-for-bit; vmap
+        # batches the K rows into one dispatch with identical bits
+        keys = jax.vmap(lambda p: jax.random.fold_in(
+            jax.random.PRNGKey(17), 2 * p + 1))(pos)
+        logits = jax.vmap(
+            lambda hrow, k: cm.qlogits(hrow[None], head, quant_cfg=quant,
+                                       key=k)[0])(h_last, keys)
+    new_cache = {"k": ks, "v": vs,
+                 "pos": pos + active.astype(jnp.int32)}
     return logits, new_cache
 
 
@@ -359,4 +438,6 @@ def build_dense_lm(cfg: ModelConfig, quant: QuantConfig) -> Model:
         decode_step=functools.partial(decode_step, cfg=cfg, quant=quant),
         cache_spec=functools.partial(kv_cache_spec, cfg),
         cache_axes=lambda: kv_cache_axes(cfg),
+        decode_slots=functools.partial(decode_slots, cfg=cfg, quant=quant),
+        slot_cache_spec=functools.partial(slot_cache_spec, cfg),
     )

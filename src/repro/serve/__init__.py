@@ -1,0 +1,26 @@
+"""Serving subsystem: continuous batching over a slot-pool KV cache.
+
+Public surface:
+
+* ``ContinuousEngine`` / ``Request`` / ``RequestResult`` — the scheduler
+  (``repro.serve.engine``),
+* ``SlotPool`` — slot bookkeeping (``repro.serve.slots``),
+* ``ServeMetrics`` — throughput/latency accounting
+  (``repro.serve.metrics``),
+* ``oneshot_generate`` / ``build_oneshot_fns`` — the lockstep reference
+  driver (``repro.serve.oneshot``).
+
+See docs/SERVING.md for the slot lifecycle, admission policy, cache
+layout, and the sampling-key schedule.
+"""
+from repro.serve.engine import (ContinuousEngine, Request, RequestResult,
+                                SAMPLE_FOLD, sampling_key)
+from repro.serve.metrics import RequestTiming, ServeMetrics
+from repro.serve.oneshot import build_oneshot_fns, oneshot_generate
+from repro.serve.slots import SlotPool, SlotState, init_slot_cache
+
+__all__ = [
+    "ContinuousEngine", "Request", "RequestResult", "SAMPLE_FOLD",
+    "sampling_key", "RequestTiming", "ServeMetrics", "build_oneshot_fns",
+    "oneshot_generate", "SlotPool", "SlotState", "init_slot_cache",
+]

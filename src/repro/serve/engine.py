@@ -1,0 +1,364 @@
+"""Continuous-batching serving engine over a slot-pool KV cache.
+
+One ``ContinuousEngine`` owns a fixed ``max_slots x max_seq`` KV cache and
+runs the scheduler loop::
+
+    while queue or active slots:
+        admit queued requests into free slots   (batched B=1 prefill each)
+        one fused masked decode tick            (all active slots at once)
+        sample one token per slot               (per-slot, per-position keys)
+        retire finished slots                   (budget / EOS / cache full)
+
+Requests of different prompt and generation lengths therefore share the
+device batch: a short request retires and its slot is refilled from the
+queue while long requests keep decoding — the decode batch stays full
+instead of lockstepping to the longest sequence (the oneshot driver's
+failure mode, kept in ``repro.serve.oneshot`` as the reference).
+
+Quantized decode works unchanged: ``decode_slots`` routes each slot's
+logits row through the quantizer-backend dispatcher
+(``repro.quant.backend``) with the position-derived key
+``fold_in(PRNGKey(17), 2*pos + 1)``, so ``--quant-fmt luq_fp4 --backend
+pallas`` serves under continuous batching and a single greedy request
+reproduces the oneshot tokens bit-for-bit.
+
+Sampling key schedule (docs/SERVING.md): every sampled token uses
+``fold_in(fold_in(fold_in(PRNGKey(seed), SAMPLE_FOLD), request_id),
+position)`` — domain-separated from the quantizer streams by SAMPLE_FOLD,
+and unique per (request, position) so concurrent slots never share a key.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ServeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.parallel import partitioner as pt
+from repro.parallel.axes import partitioning_context
+from repro.serve.metrics import ServeMetrics
+from repro.serve.slots import SlotPool, init_slot_cache
+
+# Domain-separation fold for sampling keys.  Chosen once and fixed: the
+# quantizer streams fold small per-layer seeds (fake_quant) and the logits
+# head folds 2*pos(+1) off PRNGKey(17), so a dedicated large fold off the
+# *user* seed keeps the sampling stream disjoint from both.
+SAMPLE_FOLD = 0x53A7
+
+
+def sampling_key(base_key: jax.Array, request_id, position) -> jax.Array:
+    """Per-request, per-position sampling key (see module docstring).
+
+    ``request_id`` and ``position`` may be python ints or traced int32
+    scalars; distinct (request_id, position) pairs give distinct keys, so
+    two slots decoding the same position draw independent bits.
+    """
+    k = jax.random.fold_in(base_key, SAMPLE_FOLD)
+    k = jax.random.fold_in(k, request_id)
+    return jax.random.fold_in(k, position)
+
+
+@dataclasses.dataclass
+class Request:
+    """A queued generation request."""
+
+    request_id: int
+    prompt: np.ndarray              # (S,) int32 token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0       # seconds relative to run() start
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Completed request: generated ids plus its timing record."""
+
+    request_id: int
+    prompt: np.ndarray
+    tokens: np.ndarray              # (n_generated,) int32
+    timing: object                  # metrics.RequestTiming
+
+
+class ContinuousEngine:
+    """Slot-pool scheduler running fused masked decode over active slots.
+
+    Parameters
+    ----------
+    model:
+        A ``repro.models.registry.Model`` with the slot hooks
+        (``decode_slots`` / ``slot_cache_spec``); currently the dense
+        transformer family implements them.
+    params:
+        The model's parameter pytree.
+    serve:
+        ``repro.config.ServeConfig`` — slot count, cache length, sampling
+        temperature and seed.
+    mesh:
+        Optional ``jax.sharding.Mesh``; defaults to the host mesh.  The
+        prefill/decode functions run under the same partitioning context
+        the oneshot driver uses, so sharding annotations resolve
+        identically.
+    """
+
+    def __init__(self, model, params, serve: ServeConfig, mesh=None):
+        """Allocate the slot cache and jit the engine's device functions."""
+        if model.decode_slots is None or model.slot_cache_spec is None:
+            raise ValueError(
+                f"model family {model.config.family!r} does not support "
+                "continuous batching (no decode_slots/slot_cache_spec)")
+        extra = set(model.batch_spec(1, 2)) - {"tokens"}
+        if extra:
+            # fail at construction, not deep inside prefill at admission:
+            # _admit builds {"tokens": prompt} only, so families whose
+            # batch_spec needs more inputs (encdec enc_embeds, vlm vision
+            # embeds) need a prompt-to-batch hook before they can ride the
+            # slot engine
+            raise ValueError(
+                f"continuous batching supports token-only prompts; family "
+                f"{model.config.family!r} also requires {sorted(extra)}")
+        self.model = model
+        self.params = params
+        self.serve = serve
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        rules = pt.merge_rules(pt.DEFAULT_RULES,
+                               model.config.sharding_overrides)
+        self._resolver = pt.activation_resolver(self.mesh, rules)
+        self._base_key = jax.random.PRNGKey(serve.seed)
+        self._jit_fns()
+        self.reset()
+
+    # ------------------------------------------------------------------ #
+    # device functions
+    # ------------------------------------------------------------------ #
+    def _jit_fns(self):
+        """Build the jitted prefill / cache-write / decode / sample fns."""
+        model, resolver = self.model, self._resolver
+        temperature, base_key = self.serve.temperature, self._base_key
+
+        def prefill_fn(params, batch):
+            with partitioning_context(resolver):
+                return model.prefill(params, batch)
+
+        def step_fn(params, cache, tokens, active, rids):
+            # fused decode + sample: one dispatch and one (K,) device->host
+            # transfer per tick (the (K, V) logits never leave the device)
+            with partitioning_context(resolver):
+                logits, cache = model.decode_slots(params, cache, tokens,
+                                                   active)
+            pos = cache["pos"]
+            if temperature > 0:
+                keys = jax.vmap(
+                    lambda r, p: sampling_key(base_key, r, p))(rids, pos)
+                toks = jax.vmap(lambda k, row: jax.random.categorical(
+                    k, row / temperature))(keys, logits)
+            else:
+                toks = jnp.argmax(logits, -1)
+            return toks.astype(jnp.int32), cache
+
+        def write_fn(cache, kc, vc, slot, prompt_len):
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], kc.astype(cache["k"].dtype), (0, slot, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], vc.astype(cache["v"].dtype), (0, slot, 0, 0, 0))
+            pos = cache["pos"].at[slot].set(prompt_len)
+            return {"k": k, "v": v, "pos": pos}
+
+        # prefill retraces per distinct prompt length (static shapes);
+        # step/write compile once for the slot geometry
+        self._prefill = jax.jit(prefill_fn)
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
+        self._write = jax.jit(write_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------ #
+    # public API
+    # ------------------------------------------------------------------ #
+    def reset(self):
+        """Clear all queue/slot/cache/metric state (keeps compiled fns).
+
+        Request ids restart from 0 so a reset engine reproduces a fresh
+        engine exactly — sampling keys fold the request id, so id reuse
+        across resets is what makes reruns deterministic.
+        """
+        K = self.serve.max_slots
+        self._next_id = 0
+        self.cache = init_slot_cache(self.model, K, self.serve.max_seq)
+        self.pool = SlotPool(K)
+        self.metrics = ServeMetrics()
+        self.queue: collections.deque = collections.deque()
+        self.results: Dict[int, RequestResult] = {}
+        self._tokens_by_req: Dict[int, List[int]] = {}
+        self._live: Dict[int, Request] = {}     # admitted, not yet retired
+        self._cur_tokens = np.zeros((K,), np.int32)
+        self._active = np.zeros((K,), bool)
+        self._rids = np.zeros((K,), np.int32)
+        # device copies of the three slot vectors; re-uploaded only after
+        # admission/retirement events (``_dirty``), so an event-free tick
+        # costs exactly one dispatch + one (K,) sync
+        self._dirty = True
+        self._tokens_dev = None
+        self._active_dev = None
+        self._rids_dev = None
+
+    def submit(self, prompt, max_new_tokens: Optional[int] = None,
+               arrival_time: float = 0.0,
+               eos_id: Optional[int] = None) -> int:
+        """Queue a request; returns its request id.
+
+        ``arrival_time`` is in seconds relative to the start of ``run()``;
+        the scheduler will not admit the request before that time (this is
+        how benchmark traces model Poisson arrivals).
+        """
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if prompt.size > self.serve.max_seq:
+            raise ValueError(
+                f"prompt of {prompt.size} tokens exceeds max_seq="
+                f"{self.serve.max_seq}")
+        rid = self._next_id
+        self._next_id += 1
+        budget = (self.serve.max_new_tokens if max_new_tokens is None
+                  else max_new_tokens)
+        if budget < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self.queue.append(Request(request_id=rid, prompt=prompt,
+                                  max_new_tokens=budget,
+                                  arrival_time=arrival_time, eos_id=eos_id))
+        self.metrics.on_submit(rid, prompt.size, arrival_time)
+        self._tokens_by_req[rid] = []
+        return rid
+
+    def run(self, clock: Optional[Callable[[], float]] = None
+            ) -> Dict[int, RequestResult]:
+        """Drive the scheduler until every submitted request completes.
+
+        ``clock`` (for tests) overrides the default wall clock, which is
+        seconds since ``run()`` was called.  Generated tokens are
+        clock-independent — the clock only gates admission times.
+        """
+        self.queue = collections.deque(
+            sorted(self.queue, key=lambda r: r.arrival_time))
+        t0 = time.perf_counter()
+        now_fn = clock or (lambda: time.perf_counter() - t0)
+        last_idle_now, stalled = None, 0
+        while self.queue or self.pool.n_active:
+            self._admit(now_fn)
+            if self.pool.n_active:
+                self._tick(now_fn)
+                stalled = 0
+                continue
+            if not self.queue:
+                break
+            # idle: nothing decodable until the next arrival
+            now = now_fn()
+            if self.queue[0].arrival_time > now:
+                if clock is None:
+                    t_sleep = time.perf_counter()
+                    time.sleep(min(self.queue[0].arrival_time - now, 0.05))
+                    self.metrics.idle_wall += time.perf_counter() - t_sleep
+                else:
+                    # injected clocks must advance on their own; guard
+                    # against a frozen clock turning this into a hang
+                    stalled = stalled + 1 if now == last_idle_now else 0
+                    if stalled > 1000:
+                        raise RuntimeError(
+                            "injected clock is not advancing past the next "
+                            f"arrival_time ({self.queue[0].arrival_time}); "
+                            "engine cannot make progress")
+                last_idle_now = now
+        # accumulate (not overwrite): timings persist across run() calls,
+        # so throughput over multiple runs must divide by their total wall
+        self.metrics.run_wall += now_fn()
+        return dict(self.results)
+
+    # ------------------------------------------------------------------ #
+    # scheduler internals
+    # ------------------------------------------------------------------ #
+    def _admit(self, now_fn):
+        """FCFS admission: fill free slots with arrived requests."""
+        while (self.queue and self.pool.n_free
+               and self.queue[0].arrival_time <= now_fn()):
+            req = self.queue.popleft()
+            slot = self.pool.acquire(req.request_id, req.prompt.size,
+                                     req.max_new_tokens)
+            logits, pcache = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
+            self.cache = self._write(self.cache, pcache["k"], pcache["v"],
+                                     slot, req.prompt.size)
+            # first generated token, drawn at position == prompt_len
+            if self.serve.temperature > 0:
+                key = sampling_key(self._base_key, req.request_id,
+                                   req.prompt.size)
+                tok = int(jax.random.categorical(
+                    key, logits[0] / self.serve.temperature))
+            else:
+                tok = int(jnp.argmax(logits[0]))
+            now = now_fn()
+            self._live[req.request_id] = req
+            self.metrics.on_admit(req.request_id, now)
+            self.metrics.on_first_token(req.request_id, now)
+            self._record_token(slot, req, tok, now)
+
+    def _record_token(self, slot: int, req: Request, tok: int, now: float):
+        """Append one generated token; retire the slot if finished."""
+        state = self.pool.state(slot)
+        toks = self._tokens_by_req[req.request_id]
+        toks.append(tok)
+        state.remaining -= 1
+        # the token just recorded will occupy cache index prompt_len +
+        # len(toks) - 1 on its decode tick; retire when that index would
+        # fall outside the slot (cache full), on EOS, or on budget
+        pos_next = state.prompt_len + len(toks) - 1
+        done = (state.remaining <= 0
+                or (req.eos_id is not None and tok == req.eos_id)
+                or pos_next >= self.serve.max_seq)
+        if done:
+            self._retire(slot, req, now)
+        else:
+            if not self._active[slot]:
+                self._dirty = True          # admission: slot newly active
+            self._active[slot] = True
+            self._cur_tokens[slot] = tok
+            self._rids[slot] = req.request_id
+
+    def _tick(self, now_fn):
+        """One fused decode+sample step over every active slot."""
+        if self._dirty:
+            self._tokens_dev = jnp.asarray(self._cur_tokens)
+            self._active_dev = jnp.asarray(self._active)
+            self._rids_dev = jnp.asarray(self._rids)
+            self._dirty = False
+        toks_dev, self.cache = self._step(
+            self.params, self.cache, self._tokens_dev, self._active_dev,
+            self._rids_dev)
+        toks = np.asarray(toks_dev)
+        self.metrics.decode_ticks += 1
+        now = now_fn()
+        for slot in np.nonzero(self._active)[0]:
+            slot = int(slot)
+            rid = self.pool.state(slot).request_id
+            self._record_token(slot, self._live[rid], int(toks[slot]), now)
+        if not self._dirty:
+            # no retirement this tick: the sampled tokens feed straight
+            # back in without a host->device upload
+            self._tokens_dev = toks_dev
+
+    def _retire(self, slot: int, req: Request, now: float):
+        """Release a finished slot and materialize its result."""
+        if self._active[slot]:
+            self._dirty = True
+        self._active[slot] = False
+        self.pool.release(slot)
+        self._live.pop(req.request_id, None)
+        toks = np.asarray(self._tokens_by_req[req.request_id], np.int32)
+        self.metrics.on_complete(req.request_id, now,
+                                 n_generated=int(toks.size))
+        self.results[req.request_id] = RequestResult(
+            request_id=req.request_id, prompt=req.prompt, tokens=toks,
+            timing=self.metrics.timings[req.request_id])

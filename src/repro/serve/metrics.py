@@ -1,0 +1,121 @@
+"""Serving metrics: per-request timings and fleet-level throughput/latency.
+
+The engine stamps four events per request — arrival (submit), admission
+(slot acquired + prefill), first token, completion — and this module turns
+them into the numbers a serving benchmark reports: tokens/sec over the run,
+and p50/p99 of end-to-end latency, time-to-first-token, and queue wait.
+All times are seconds on whatever clock the engine uses (wall clock by
+default; tests may inject a fake clock).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    """Event timestamps and token counts for one request."""
+
+    request_id: int
+    prompt_len: int
+    arrival: float
+    admitted: Optional[float] = None
+    first_token: Optional[float] = None
+    completed: Optional[float] = None
+    n_generated: int = 0
+
+    @property
+    def queue_wait(self) -> float:
+        """Seconds spent queued before a slot freed up."""
+        return self.admitted - self.arrival
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from arrival."""
+        return self.first_token - self.arrival
+
+    @property
+    def latency(self) -> float:
+        """End-to-end seconds from arrival to the last token."""
+        return self.completed - self.arrival
+
+
+class ServeMetrics:
+    """Accumulates per-request timings and summarizes a serving run."""
+
+    def __init__(self):
+        """Start with an empty timing table."""
+        self.timings: Dict[int, RequestTiming] = {}
+        self.decode_ticks = 0
+        # both walls accumulate across run() calls (reset() clears them):
+        # run_wall = total scheduler-loop time, idle_wall = the part spent
+        # sleeping for future arrivals (no decodable work)
+        self.run_wall: float = 0.0
+        self.idle_wall: float = 0.0
+
+    def on_submit(self, request_id: int, prompt_len: int,
+                  arrival: float) -> None:
+        """Record a request entering the queue."""
+        self.timings[request_id] = RequestTiming(
+            request_id=request_id, prompt_len=prompt_len, arrival=arrival)
+
+    def on_admit(self, request_id: int, now: float) -> None:
+        """Record slot acquisition (prefill happens at admission)."""
+        self.timings[request_id].admitted = now
+
+    def on_first_token(self, request_id: int, now: float) -> None:
+        """Record the first generated token."""
+        self.timings[request_id].first_token = now
+
+    def on_complete(self, request_id: int, now: float,
+                    n_generated: int) -> None:
+        """Record retirement with the request's generated-token count."""
+        t = self.timings[request_id]
+        t.completed = now
+        t.n_generated = n_generated
+
+    def _done(self) -> List[RequestTiming]:
+        return [t for t in self.timings.values() if t.completed is not None]
+
+    def summary(self) -> dict:
+        """Aggregate throughput and latency percentiles for completed work.
+
+        ``tokens_per_sec`` counts *generated* tokens only (prompt tokens are
+        input, not output) over ``run_wall``, which the engine sets to the
+        full scheduler-loop wall time.
+        """
+        done = self._done()
+        if not done:
+            # same key set as the populated branch so callers can index
+            # unconditionally
+            return {"n_requests": 0, "total_new_tokens": 0,
+                    "run_wall_s": self.run_wall,
+                    "idle_wall_s": self.idle_wall,
+                    "tokens_per_sec": 0.0,
+                    "decode_ticks": self.decode_ticks,
+                    "latency_p50_s": 0.0, "latency_p99_s": 0.0,
+                    "ttft_p50_s": 0.0, "ttft_p99_s": 0.0,
+                    "queue_wait_p50_s": 0.0, "queue_wait_p99_s": 0.0}
+        lat = np.array([t.latency for t in done])
+        ttft = np.array([t.ttft for t in done])
+        wait = np.array([t.queue_wait for t in done])
+        total_new = int(sum(t.n_generated for t in done))
+        wall = self.run_wall or max(t.completed for t in done) - min(
+            t.arrival for t in done)
+        return {
+            "n_requests": len(done),
+            "total_new_tokens": total_new,
+            "run_wall_s": wall,
+            "idle_wall_s": self.idle_wall,
+            "tokens_per_sec": total_new / max(wall, 1e-9),
+            "decode_ticks": self.decode_ticks,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p99_s": float(np.percentile(lat, 99)),
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            "queue_wait_p50_s": float(np.percentile(wait, 50)),
+            "queue_wait_p99_s": float(np.percentile(wait, 99)),
+        }

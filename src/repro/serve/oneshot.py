@@ -1,0 +1,73 @@
+"""Oneshot serving: one fixed batch, synchronous prefill, lockstep decode.
+
+This is the original ``repro.launch.serve`` driver factored into a library
+so it can serve two roles:
+
+* the **equivalence reference** for the continuous engine — for a single
+  greedy request on a fixed seed the engine must reproduce these tokens
+  bit-for-bit (tests/test_serve_engine.py), and
+* the **baseline** for ``benchmarks/serve_throughput.py`` — every request
+  is padded to the batch-max prompt length and decoded to the batch-max
+  generation length, which is exactly the throughput collapse continuous
+  batching exists to fix.
+
+Sampling note: the lockstep driver keeps its legacy *shared* sampling key
+(one fold per decode step, same key for every row).  The continuous engine
+uses the per-slot, per-position schedule in ``repro.serve.engine`` instead;
+see docs/SERVING.md for why the shared key is wrong under multi-tenancy.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import build_serve_setup
+
+
+def build_oneshot_fns(model, run, mesh, batch: int,
+                      cache_len: int) -> Tuple:
+    """Jit the (prefill, decode) pair for a fixed batch/cache geometry."""
+    setup = build_serve_setup(model, run, mesh, batch, cache_len)
+    return jax.jit(setup.prefill_fn), jax.jit(setup.decode_fn)
+
+
+def oneshot_generate(prefill, decode, params, batch: dict, gen: int, *,
+                     temperature: float = 0.0,
+                     base_key: Optional[jax.Array] = None):
+    """Run batched prefill then ``gen - 1`` lockstep decode steps.
+
+    Returns ``(tokens, timings)`` where ``tokens`` is the (B, gen) int32
+    array of generated ids (position 0 comes from the prefill logits) and
+    ``timings`` has ``prefill_s`` / ``decode_s`` wall times.
+    """
+    if base_key is None:
+        base_key = jax.random.PRNGKey(0)
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    def pick(logits, i):
+        if temperature > 0:
+            k = jax.random.fold_in(base_key, 100 + i)
+            return jax.random.categorical(
+                k, logits / temperature).astype(jnp.int32)
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # legacy behavior preserved: the prefill token is always greedy; only
+    # the decode-loop tokens are temperature-sampled (with the shared key)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    generated = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for i in range(gen - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = pick(logits, i)
+        generated.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    return (np.stack(generated, axis=1),
+            {"prefill_s": t_prefill, "decode_s": t_decode})

@@ -1,0 +1,107 @@
+"""Slot pool: host-side bookkeeping for the fixed-size decode batch.
+
+The continuous-batching engine (``repro.serve.engine``) allocates one
+``max_slots x max_seq`` KV cache when it starts and never reallocates; a
+*slot* is one row of that cache.  This module owns the host-side state of
+the pool — which slots are free, which request occupies each busy slot, and
+how many tokens each occupant may still generate — while the device-side
+state (the KV tensors and the per-slot position vector) lives in the
+engine's cache pytree.
+
+Slot lifecycle (documented in docs/SERVING.md):
+
+    FREE -> (admit: prefill writes the prompt KV) -> ACTIVE
+         -> (retire: budget exhausted / EOS / cache full) -> FREE
+
+A retired slot is reusable immediately: the next admission's prefill
+overwrites cache rows ``[0, prompt_len)`` and every read is masked by the
+slot's position, so stale KV from the previous occupant is never attended.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host-side record of one occupied slot."""
+
+    request_id: int
+    remaining: int          # generation budget left (tokens)
+    prompt_len: int
+
+
+class SlotPool:
+    """Free-list allocator over the ``n_slots`` rows of the slot cache.
+
+    Purely host-side and O(1) per operation; the engine consults it every
+    tick to decide admission and retirement.  ``admissions`` counts total
+    acquires per slot so tests can assert slots are actually reused.
+    """
+
+    def __init__(self, n_slots: int):
+        """Create a pool with all ``n_slots`` slots free."""
+        if n_slots < 1:
+            raise ValueError("SlotPool needs at least one slot")
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._busy: Dict[int, SlotState] = {}
+        self.admissions = [0] * n_slots
+
+    @property
+    def n_free(self) -> int:
+        """Number of currently free slots."""
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        """Number of currently occupied slots."""
+        return len(self._busy)
+
+    def state(self, slot: int) -> SlotState:
+        """Return the occupant record of a busy ``slot``."""
+        return self._busy[slot]
+
+    def active_slots(self) -> List[int]:
+        """Occupied slot indices in ascending order."""
+        return sorted(self._busy)
+
+    def acquire(self, request_id: int, prompt_len: int,
+                budget: int) -> Optional[int]:
+        """Claim a free slot for ``request_id``; None when the pool is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._busy[slot] = SlotState(request_id=request_id,
+                                     remaining=budget,
+                                     prompt_len=prompt_len)
+        self.admissions[slot] += 1
+        return slot
+
+    def release(self, slot: int) -> SlotState:
+        """Retire ``slot`` back to the free list and return its record."""
+        state = self._busy.pop(slot)
+        self._free.append(slot)
+        return state
+
+
+def init_slot_cache(model, n_slots: int, max_seq: int):
+    """Materialize the zero-filled slot cache pytree for ``model``.
+
+    Shapes come from the model's ``slot_cache_spec`` hook (for the dense
+    transformer: k/v of shape (L, n_slots, KV, max_seq, hd) plus a
+    (n_slots,) int32 position vector).  Zero initialization matters: masked
+    attention over a zero-padded cache is bit-identical to attention over a
+    shorter cache, which is what makes the engine equivalent to the oneshot
+    driver (docs/SERVING.md).
+    """
+    if model.slot_cache_spec is None:
+        raise ValueError(
+            f"model family {model.config.family!r} does not implement "
+            "slot-pool decoding (decode_slots/slot_cache_spec)")
+    spec = model.slot_cache_spec(n_slots, max_seq)
+    return {name: jnp.zeros(sds.shape, sds.dtype)
+            for name, sds in spec.items()}

@@ -1,0 +1,80 @@
+"""Docs cannot rot: the capability table in docs/QUANTIZATION.md must match
+the quant/backend registry, and every markdown link must resolve."""
+import importlib.util
+import re
+from pathlib import Path
+
+from repro.quant import backend as qb
+
+REPO = Path(__file__).resolve().parent.parent
+QUANT_DOC = REPO / "docs" / "QUANTIZATION.md"
+
+
+def _load_linkcheck():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_links", REPO / "scripts" / "check_docs_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def parse_doc_capability_table():
+    """Parse the marker-delimited table into {op: {backend: (formats...)}}."""
+    text = QUANT_DOC.read_text()
+    m = re.search(r"<!-- capability-table:begin -->(.*?)"
+                  r"<!-- capability-table:end -->", text, re.S)
+    assert m, "capability-table markers missing from docs/QUANTIZATION.md"
+    rows = [r for r in m.group(1).strip().splitlines() if r.startswith("|")]
+    header = [c.strip().strip("`") for c in rows[0].strip("|").split("|")]
+    assert header[0] == "op"
+    backends = header[1:]
+    table = {}
+    for row in rows[2:]:                       # skip header + separator
+        cells = [c.strip() for c in row.strip("|").split("|")]
+        op = cells[0].strip("`")
+        table[op] = {}
+        for backend, cell in zip(backends, cells[1:]):
+            fmts = tuple(sorted(f.strip().strip("`")
+                                for f in cell.split(",") if f.strip()))
+            table[op][backend] = fmts
+    return table
+
+
+def test_capability_table_in_docs_matches_registry():
+    """The format×op×backend table documented in docs/QUANTIZATION.md is
+    generated from capability_table(); any drift fails CI (docs job)."""
+    doc = parse_doc_capability_table()
+    code = qb.capability_table()
+    assert set(doc) == set(code), (
+        f"ops differ: doc={sorted(doc)} code={sorted(code)}")
+    for op in code:
+        assert set(doc[op]) == set(code[op]), (op, doc[op], code[op])
+        for backend in code[op]:
+            assert doc[op][backend] == code[op][backend], (
+                f"docs/QUANTIZATION.md capability table is stale for "
+                f"op={op!r} backend={backend!r}: doc lists "
+                f"{doc[op][backend]}, registry has {code[op][backend]}")
+
+
+def test_docs_pages_exist_and_are_linked_from_readme():
+    readme = (REPO / "README.md").read_text()
+    for page in ("ARCHITECTURE.md", "SERVING.md", "QUANTIZATION.md"):
+        assert (REPO / "docs" / page).exists(), f"docs/{page} missing"
+        assert f"docs/{page}" in readme, f"README does not link docs/{page}"
+
+
+def test_markdown_links_resolve():
+    """Same check the CI docs job runs via scripts/check_docs_links.py."""
+    mod = _load_linkcheck()
+    errors = []
+    for f in mod.collect([str(REPO / "README.md"), str(REPO / "docs")]):
+        errors += mod.check_file(f)
+    assert not errors, "\n".join(errors)
+
+
+def test_github_slugification():
+    mod = _load_linkcheck()
+    assert mod.github_slug("RNG stream contract") == "rng-stream-contract"
+    assert mod.github_slug("Why continuous batching?") == \
+        "why-continuous-batching"
+    assert mod.github_slug("`quantize` (fake-quant)") == "quantize-fake-quant"

@@ -1,0 +1,296 @@
+"""Continuous-batching engine: oneshot equivalence, slot lifecycle,
+quantized decode, and the sampling-key schedule (docs/SERVING.md)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (DPConfig, ModelConfig, OptimConfig, QuantConfig,
+                          RunConfig, ServeConfig)
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.serve import (ContinuousEngine, SlotPool, build_oneshot_fns,
+                         oneshot_generate, sampling_key)
+
+VOCAB = 64
+
+
+def tiny_cfg():
+    return ModelConfig(name="lm-tiny", family="dense_lm", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                       d_ff=64, vocab_size=VOCAB, compute_dtype="float32",
+                       remat=False)
+
+
+def make_model(fmt="none", backend="ref"):
+    cfg = tiny_cfg()
+    model = build_model(cfg, QuantConfig(fmt=fmt, backend=backend))
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def prompt_of(seed, length):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed),
+                                         (length,), 0, VOCAB), np.int32)
+
+
+def oneshot_reference(model, params, prompt, gen):
+    """Tokens from the lockstep reference driver for one greedy request."""
+    run = RunConfig(model=model.config, quant=model.quant,
+                    dp=DPConfig(enabled=False), optim=OptimConfig())
+    prefill, decode = build_oneshot_fns(model, run, make_host_mesh(), 1,
+                                        prompt.size + gen)
+    tokens, _ = oneshot_generate(prefill, decode, params,
+                                 {"tokens": jnp.asarray(prompt)[None, :]},
+                                 gen)
+    return tokens[0].tolist()
+
+
+# --------------------------------------------------------------------------- #
+# engine vs oneshot token equivalence
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("fmt,backend", [("none", "ref"),
+                                         ("luq_fp4", "ref"),
+                                         ("luq_fp4", "pallas")])
+def test_engine_matches_oneshot_single_greedy(fmt, backend):
+    """A single greedy request on a fixed seed must be token-identical to
+    the oneshot driver — including through the quantized logits head on
+    both dispatcher backends (same per-position fold of PRNGKey(17))."""
+    model, params = make_model(fmt, backend)
+    prompt, gen = prompt_of(1, 7), 5
+    ref = oneshot_reference(model, params, prompt, gen)
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=1,
+                                          max_seq=prompt.size + gen))
+    rid = engine.submit(prompt, max_new_tokens=gen)
+    out = engine.run()
+    assert out[rid].tokens.tolist() == ref
+
+
+def test_mixed_length_requests_each_match_their_oneshot_reference():
+    """Multiple requests with different prompt/generation lengths sharing
+    two slots must each reproduce their own single-request reference —
+    continuous batching may not leak state across slots."""
+    model, params = make_model()
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=2, max_seq=24))
+    specs = [(3, 6), (9, 3), (5, 2), (4, 7)]       # (prompt_len, gen)
+    rids = [engine.submit(prompt_of(10 + i, pl), max_new_tokens=g)
+            for i, (pl, g) in enumerate(specs)]
+    out = engine.run()
+    assert sorted(out) == sorted(rids)
+    for rid, (pl, g) in zip(rids, specs):
+        assert out[rid].tokens.size == g
+        ref = oneshot_reference(model, params, prompt_of(10 + rids.index(rid), pl), g)
+        assert out[rid].tokens.tolist() == ref
+
+
+# --------------------------------------------------------------------------- #
+# slot lifecycle
+# --------------------------------------------------------------------------- #
+def test_slot_reuse_after_retirement():
+    """With one slot and three queued requests the slot must be acquired
+    three times and every request must complete."""
+    model, params = make_model()
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=1, max_seq=16))
+    rids = [engine.submit(prompt_of(20 + i, 4 + i), max_new_tokens=3)
+            for i in range(3)]
+    out = engine.run()
+    assert sorted(out) == sorted(rids)
+    assert engine.pool.admissions == [3]
+    assert engine.pool.n_free == 1 and engine.pool.n_active == 0
+    for rid in rids:
+        assert out[rid].tokens.size == 3
+
+
+def test_cache_full_truncates_generation():
+    """A slot retires when its next token would not fit in max_seq."""
+    model, params = make_model()
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=1, max_seq=10))
+    rid = engine.submit(prompt_of(3, 7), max_new_tokens=50)
+    out = engine.run()
+    # tokens occupy cache indices prompt_len + n - 1; the last admissible
+    # token is the one whose write index is max_seq - 1, plus the final
+    # sampled-but-never-cached token
+    assert out[rid].tokens.size == 10 - 7 + 1
+
+
+def test_eos_retires_slot_early():
+    """EOS seen in the sampled stream stops the request immediately."""
+    model, params = make_model()
+    prompt, gen = prompt_of(1, 7), 6
+    full = oneshot_reference(model, params, prompt, gen)
+    eos = full[2]       # third greedy token acts as the EOS id
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=1,
+                                          max_seq=prompt.size + gen))
+    rid = engine.submit(prompt, max_new_tokens=gen, eos_id=eos)
+    out = engine.run()
+    assert out[rid].tokens.tolist() == full[:3]
+
+
+def test_submit_validation():
+    model, params = make_model()
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=1, max_seq=8))
+    with pytest.raises(ValueError, match="empty"):
+        engine.submit(np.zeros((0,), np.int32))
+    with pytest.raises(ValueError, match="max_seq"):
+        engine.submit(np.zeros((9,), np.int32))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        engine.submit(np.zeros((3,), np.int32), max_new_tokens=0)
+
+
+def test_engine_requires_slot_decode_support():
+    cfg = ModelConfig(name="rn", family="resnet", resnet_blocks=(1,),
+                      num_classes=4, image_size=8, compute_dtype="float32")
+    model = build_model(cfg, QuantConfig(fmt="none"))
+    with pytest.raises(ValueError, match="continuous batching"):
+        ContinuousEngine(model, params=None,
+                         serve=ServeConfig(max_slots=1, max_seq=8))
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="max_slots"):
+        ServeConfig(max_slots=0)
+    with pytest.raises(ValueError, match="max_seq"):
+        ServeConfig(max_seq=1)
+
+
+def test_injected_clock_gates_admission_and_frozen_clock_raises():
+    """An advancing fake clock delays admission until arrival_time; a
+    frozen fake clock must raise instead of hanging the scheduler."""
+    model, params = make_model()
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=1, max_seq=16))
+    engine.submit(prompt_of(1, 4), max_new_tokens=2, arrival_time=0.5)
+
+    ticks = {"n": 0}
+
+    def advancing_clock():
+        ticks["n"] += 1
+        return ticks["n"] * 0.01            # 10 ms per observation
+
+    out = engine.run(clock=advancing_clock)
+    assert len(out) == 1
+    (timing,) = [r.timing for r in out.values()]
+    assert timing.admitted >= 0.5           # arrival-gated
+
+    engine.reset()
+    engine.submit(prompt_of(1, 4), max_new_tokens=2, arrival_time=1e9)
+    with pytest.raises(RuntimeError, match="not advancing"):
+        engine.run(clock=lambda: 0.0)
+
+
+def test_metrics_accumulate_across_sequential_runs():
+    """Two run() calls without reset(): throughput must divide the summed
+    token count by the summed wall, not by the latest run's wall only."""
+    model, params = make_model()
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=1, max_seq=16))
+    a = engine.submit(prompt_of(1, 4), max_new_tokens=3)
+    engine.run()
+    wall1 = engine.metrics.run_wall
+    assert wall1 > 0
+    b = engine.submit(prompt_of(2, 4), max_new_tokens=3)
+    engine.run()
+    s = engine.metrics.summary()
+    assert engine.metrics.run_wall > wall1
+    assert s["n_requests"] == 2 and s["total_new_tokens"] == 6
+    assert s["run_wall_s"] == engine.metrics.run_wall
+    assert a in engine.results and b in engine.results
+
+
+def test_reset_restarts_request_ids_for_deterministic_reruns():
+    """reset() must reproduce a fresh engine: request ids restart at 0,
+    so temperature-sampling keys (which fold the id) are identical."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=1, max_seq=16, temperature=0.9, seed=5)
+    engine = ContinuousEngine(model, params, serve)
+
+    def one_run():
+        rid = engine.submit(prompt_of(2, 5), max_new_tokens=4)
+        assert rid == 0
+        out = engine.run()
+        engine.reset()
+        return out[rid].tokens.tolist()
+
+    assert one_run() == one_run()
+
+
+def test_slot_pool_free_list():
+    pool = SlotPool(2)
+    a = pool.acquire(0, 4, 8)
+    b = pool.acquire(1, 4, 8)
+    assert {a, b} == {0, 1} and pool.acquire(2, 4, 8) is None
+    pool.release(a)
+    assert pool.n_free == 1 and pool.acquire(3, 2, 2) == a
+
+
+# --------------------------------------------------------------------------- #
+# quantized serving smoke
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_quantized_continuous_serving_smoke(backend):
+    """luq_fp4 serving under continuous batching completes on both
+    dispatcher backends and stays in the (padded) vocab range."""
+    model, params = make_model("luq_fp4", backend)
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=2, max_seq=20))
+    rids = [engine.submit(prompt_of(30 + i, 4 + 2 * i), max_new_tokens=3)
+            for i in range(3)]
+    out = engine.run()
+    vpad = model.config.padded_vocab
+    for rid in rids:
+        toks = out[rid].tokens
+        assert toks.size == 3
+        assert ((toks >= 0) & (toks < vpad)).all()
+
+
+# --------------------------------------------------------------------------- #
+# sampling key schedule (satellite: per-slot, per-position keys)
+# --------------------------------------------------------------------------- #
+def test_sampling_keys_unique_per_request_and_position():
+    """No two (request, position) pairs may share a sampling key — in
+    particular two slots decoding the same position draw independent
+    bits (the legacy oneshot driver shared one key across the batch)."""
+    def key_bits(k):
+        try:                       # typed PRNG keys (newer jax defaults)
+            return tuple(np.asarray(jax.random.key_data(k)).ravel().tolist())
+        except TypeError:          # legacy raw uint32 key arrays
+            return tuple(np.asarray(k).ravel().tolist())
+
+    base = jax.random.PRNGKey(0)
+    seen = {}
+    for rid in range(6):
+        for pos in range(20):
+            k = key_bits(sampling_key(base, rid, pos))
+            assert k not in seen, (rid, pos, seen[k])
+            seen[k] = (rid, pos)
+    # two slots, same position: distinct keys AND distinct drawn bits
+    logits = jnp.zeros((VOCAB,))
+    k0 = sampling_key(base, 0, 9)
+    k1 = sampling_key(base, 1, 9)
+    draws0 = [int(jax.random.categorical(jax.random.fold_in(k0, i), logits))
+              for i in range(8)]
+    draws1 = [int(jax.random.categorical(jax.random.fold_in(k1, i), logits))
+              for i in range(8)]
+    assert draws0 != draws1
+
+
+def test_temperature_sampling_deterministic_across_runs():
+    """Same seed + same request ids -> identical sampled tokens, because
+    keys depend only on (seed, request_id, position), never on wall time."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=2, max_seq=20, temperature=0.9, seed=7)
+
+    def one_run():
+        engine = ContinuousEngine(model, params, serve)
+        rids = [engine.submit(prompt_of(40 + i, 5), max_new_tokens=4)
+                for i in range(3)]
+        out = engine.run()
+        return [out[r].tokens.tolist() for r in rids]
+
+    assert one_run() == one_run()
