@@ -3,11 +3,20 @@
 Every benchmark reproduces one paper table/figure at CPU scale (reduced
 models, synthetic data — see DESIGN.md §6) and prints ``name,value,...``
 CSV rows so runs are diffable.
+
+Timing protocol (the PR-1/PR-3 lesson): this container throttles the CPU
+under sustained load, so phase-ordered timing (all of variant A, then all
+of variant B) attributes the slowdown to whichever variant runs last.
+Every comparative benchmark therefore *interleaves* its variants —
+``interleave_timed`` alternates one invocation of each runner per
+repetition so slow machine drift hits all variants equally — and robust
+aggregation takes the median repetition (``median_by``).
 """
 from __future__ import annotations
 
 import sys
 import time
+from typing import Any, Callable, Dict, List
 
 from repro.config import (DPConfig, ModelConfig, OptimConfig, QuantConfig,
                           RunConfig)
@@ -15,6 +24,65 @@ from repro.data.synthetic import ImageClassDataset
 from repro.train_loop import Trainer
 
 _CSV_HEADER_PRINTED = set()
+
+
+def interleave_timed(fns: Dict[str, Callable[[], Any]],
+                     reps: int) -> Dict[str, List[Any]]:
+    """Run each named zero-arg runner once per repetition, alternating
+    variants to cancel machine drift/throttling.
+
+    The within-rep order reverses on every other repetition (A B, B A,
+    A B, ...): with a fixed order, throttling that builds up while the
+    first variant runs lands systematically on the second one — the
+    palindromic schedule cancels pair-periodic effects as well as slow
+    drift.
+
+    Returns ``{name: [result per rep]}``; runners do their own timing and
+    return whatever they measure (a wall-clock float, a metrics dict, ...).
+    """
+    out: Dict[str, List[Any]] = {k: [] for k in fns}
+    order = list(fns)
+    for rep in range(reps):
+        for name in (order if rep % 2 == 0 else reversed(order)):
+            out[name].append(fns[name]())
+    return out
+
+
+def median_by(reps: List[Any], key: Callable[[Any], float]):
+    """The repetition with the median ``key`` value (odd-length robust)."""
+    return sorted(reps, key=key)[len(reps) // 2]
+
+
+def bench_trainers(trainers: Dict[str, Trainer], *, epochs: int,
+                   steps_per_epoch: int, warmup_epochs: int = 1) -> dict:
+    """Interleaved epoch timing for a dict of named Trainers.
+
+    All trainers are warmed first (compile + shared data-cache population),
+    then epochs alternate across variants via ``interleave_timed``.
+    Returns ``{name: {epochs, steps, wall_s, steps_per_sec, ms_per_step}}``.
+    """
+    for tr in trainers.values():
+        for _ in range(warmup_epochs):
+            tr.train_epoch(-1)
+
+    def timed_epoch(tr: Trainer) -> Callable[[], float]:
+        counter = iter(range(epochs))
+
+        def run() -> float:
+            t0 = time.perf_counter()
+            tr.train_epoch(next(counter))
+            return time.perf_counter() - t0
+
+        return run
+
+    walls = {name: sum(reps) for name, reps in interleave_timed(
+        {n: timed_epoch(tr) for n, tr in trainers.items()},
+        reps=epochs).items()}
+    steps = epochs * steps_per_epoch
+    return {name: {"epochs": epochs, "steps": steps, "wall_s": dt,
+                   "steps_per_sec": steps / dt,
+                   "ms_per_step": dt / steps * 1e3}
+            for name, dt in walls.items()}
 
 
 def emit(table: str, **kv):

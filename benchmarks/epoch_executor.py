@@ -26,11 +26,10 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import time
 
 import numpy as np
 
-from common import emit, make_run
+from common import bench_trainers, emit, make_run
 from repro.config import ModelConfig
 from repro.data.synthetic import ImageClassDataset
 from repro.train_loop import Trainer
@@ -38,25 +37,17 @@ from repro.train_loop import Trainer
 
 def bench_executors(base_run, dataset, *, epochs: int,
                     warmup_epochs: int = 2) -> dict:
-    """Time both executors, interleaving epochs to cancel machine drift."""
-    trainers = {}
-    for executor in ("loop", "scan"):
-        run = dataclasses.replace(base_run, epoch_executor=executor)
-        trainers[executor] = Trainer(run, dataset, mode="static")
-        for _ in range(warmup_epochs):      # compile + populate data cache
-            trainers[executor].train_epoch(-1)
-    walls = {"loop": 0.0, "scan": 0.0}
-    for e in range(epochs):
-        for executor, tr in trainers.items():
-            t0 = time.perf_counter()
-            tr.train_epoch(e)
-            walls[executor] += time.perf_counter() - t0
-    steps = epochs * base_run.steps_per_epoch
-    return {executor: {"executor": executor, "epochs": epochs,
-                       "steps": steps, "wall_s": dt,
-                       "steps_per_sec": steps / dt,
-                       "ms_per_step": dt / steps * 1e3}
-            for executor, dt in walls.items()}
+    """Time both executors via the shared interleaved protocol."""
+    trainers = {
+        executor: Trainer(dataclasses.replace(base_run,
+                                              epoch_executor=executor),
+                          dataset, mode="static")
+        for executor in ("loop", "scan")}
+    results = bench_trainers(trainers, epochs=epochs,
+                             steps_per_epoch=base_run.steps_per_epoch,
+                             warmup_epochs=warmup_epochs)
+    return {executor: {"executor": executor, **r}
+            for executor, r in results.items()}
 
 
 def main(argv=None):

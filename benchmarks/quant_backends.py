@@ -30,7 +30,7 @@ import time
 
 import numpy as np
 
-from common import emit, make_run
+from common import bench_trainers, emit, make_run
 from repro.config import ModelConfig
 from repro.data.synthetic import ImageClassDataset, TokenDataset
 from repro.train_loop import Trainer
@@ -40,26 +40,18 @@ BACKENDS = ("ref", "pallas")
 
 def bench_backends(base_run, dataset, *, epochs: int,
                    warmup_epochs: int = 1) -> dict:
-    """Time both backends, interleaving epochs to cancel machine drift."""
-    trainers = {}
-    for backend in BACKENDS:
-        run = dataclasses.replace(
+    """Time both backends via the shared interleaved protocol."""
+    trainers = {
+        backend: Trainer(dataclasses.replace(
             base_run, quant=dataclasses.replace(base_run.quant,
-                                                backend=backend))
-        trainers[backend] = Trainer(run, dataset, mode="static")
-        for _ in range(warmup_epochs):      # compile + populate data cache
-            trainers[backend].train_epoch(-1)
-    walls = {b: 0.0 for b in BACKENDS}
-    for e in range(epochs):
-        for backend, tr in trainers.items():
-            t0 = time.perf_counter()
-            tr.train_epoch(e)
-            walls[backend] += time.perf_counter() - t0
-    steps = epochs * base_run.steps_per_epoch
-    return {backend: {"backend": backend, "epochs": epochs, "steps": steps,
-                      "wall_s": dt, "steps_per_sec": steps / dt,
-                      "ms_per_step": dt / steps * 1e3}
-            for backend, dt in walls.items()}
+                                                backend=backend)),
+            dataset, mode="static")
+        for backend in BACKENDS}
+    results = bench_trainers(trainers, epochs=epochs,
+                             steps_per_epoch=base_run.steps_per_epoch,
+                             warmup_epochs=warmup_epochs)
+    return {backend: {"backend": backend, **r}
+            for backend, r in results.items()}
 
 
 def lm_model() -> ModelConfig:

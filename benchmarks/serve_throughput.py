@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from common import emit
+from common import emit, interleave_timed, median_by
 from repro.config import (DPConfig, ModelConfig, OptimConfig, QuantConfig,
                           RunConfig, ServeConfig)
 from repro.launch.mesh import make_host_mesh
@@ -178,11 +178,6 @@ def measure_continuous(engine, trace) -> dict:
     }
 
 
-def median_rep(reps):
-    """The repetition with the median tokens_per_sec (odd-length robust)."""
-    return sorted(reps, key=lambda r: r["tokens_per_sec"])[len(reps) // 2]
-
-
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -214,18 +209,20 @@ def main(argv=None):
     max_seq = max_prompt + max(gens)
 
     # interleave the timed passes (continuous/oneshot alternating) and take
-    # medians: this container throttles CPU under sustained load, so
-    # phase-ordered timing would attribute the slowdown to whichever
-    # engine runs last (same protocol as benchmarks/epoch_executor.py)
+    # medians (benchmarks/common.py protocol): this container throttles CPU
+    # under sustained load, so phase-ordered timing would attribute the
+    # slowdown to whichever engine runs last
     plans = prepare_oneshot(model, params, run, trace, slots=slots)
     engine = prepare_continuous(model, params, trace, slots=slots,
                                 max_seq=max_seq)
     reps = 3
-    cont_reps, one_reps = [], []
-    for _ in range(reps):
-        cont_reps.append(measure_continuous(engine, trace))
-        one_reps.append(measure_oneshot(plans, params, trace))
-    continuous, oneshot = median_rep(cont_reps), median_rep(one_reps)
+    results = interleave_timed(
+        {"continuous": lambda: measure_continuous(engine, trace),
+         "oneshot": lambda: measure_oneshot(plans, params, trace)},
+        reps=reps)
+    continuous, oneshot = (
+        median_by(results["continuous"], lambda r: r["tokens_per_sec"]),
+        median_by(results["oneshot"], lambda r: r["tokens_per_sec"]))
     speedup = continuous["tokens_per_sec"] / oneshot["tokens_per_sec"]
     speedup_compute = (continuous["tokens_per_sec_compute_only"]
                        / oneshot["tokens_per_sec_compute_only"])

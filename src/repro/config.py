@@ -145,6 +145,16 @@ class DPConfig:
     # per-example grads to (B, D) and run the fused Pallas clip+sum kernel
     # (one HBM pass; incompatible with partial_accum).
     clip_backend: str = "ref"
+    # Per-example gradient engine (docs/ARCHITECTURE.md "DP gradient modes"):
+    # "vmap"  = materialize per-example grads with vmap(grad) and clip+sum
+    #           them (dp/clip.py) — O(B x params) memory, B rank-1 wgrads;
+    # "ghost" = two-pass ghost-norm clipping (dp/ghost.py) — per-example
+    #           norms from layer activation/cotangent Grams, then ONE
+    #           scale-reweighted batched backward.  Requires a model family
+    #           with ghost hooks (dense_lm, resnet, densenet); incompatible
+    #           with partial_accum and clip_backend="fused"; microbatch_size
+    #           is ignored (the whole batch is one fused pass).
+    grad_mode: str = "vmap"
     # DPQuant analysis (paper Table 3 defaults)
     analysis_interval: int = 2       # epochs between COMPUTELOSSIMPACT runs
     analysis_reps: int = 2           # R

@@ -2,11 +2,17 @@ from repro.dp.accountant import (
     RDPAccountant, compute_rdp_sgm, rdp_to_eps, DEFAULT_ORDERS)
 from repro.dp.clip import (
     per_example_clipped_grad_sum, clip_by_global_norm, global_norm)
+from repro.dp.ghost import (
+    ghost_clipped_grad_sum, ghost_per_example_norms, per_example_state_bytes)
 from repro.dp.noise import add_gaussian_noise
-from repro.dp.engine import make_dp_grad_fn, make_nondp_grad_fn
+from repro.dp.engine import (
+    make_dp_grad_fn, make_nondp_grad_fn, validate_grad_mode)
 
 __all__ = [
     "RDPAccountant", "compute_rdp_sgm", "rdp_to_eps", "DEFAULT_ORDERS",
     "per_example_clipped_grad_sum", "clip_by_global_norm", "global_norm",
+    "ghost_clipped_grad_sum", "ghost_per_example_norms",
+    "per_example_state_bytes",
     "add_gaussian_noise", "make_dp_grad_fn", "make_nondp_grad_fn",
+    "validate_grad_mode",
 ]

@@ -15,23 +15,70 @@ import jax.numpy as jnp
 
 from repro.config import DPConfig
 from repro.dp.clip import per_example_clipped_grad_sum
+from repro.dp.ghost import ghost_clipped_grad_sum
 from repro.dp.noise import add_gaussian_noise
 
 
-def make_dp_grad_fn(loss_fn: Callable, dp: DPConfig) -> Callable:
+def validate_grad_mode(dp: DPConfig, model=None) -> None:
+    """Fail fast on grad-mode knob combinations the engine cannot honor.
+
+    ``model`` (a ``repro.models.registry.Model``) is optional; when given,
+    ghost mode additionally requires the family to expose ghost hooks.
+    """
+    if dp.grad_mode not in ("vmap", "ghost"):
+        raise ValueError(f"dp.grad_mode must be 'vmap' or 'ghost', "
+                         f"got {dp.grad_mode!r}")
+    if dp.grad_mode != "ghost":
+        return
+    if dp.partial_accum:
+        raise ValueError("grad_mode='ghost' computes the clipped grad sum "
+                         "in one reweighted backward and keeps no per-shard "
+                         "partial sums; disable dp.partial_accum or use "
+                         "grad_mode='vmap'")
+    if dp.clip_backend == "fused":
+        raise ValueError("clip_backend='fused' operates on materialized "
+                         "(B, D) per-example grads, which ghost mode never "
+                         "forms; use clip_backend='ref' with "
+                         "grad_mode='ghost'")
+    if model is not None and (model.per_example_loss is None
+                              or model.ghost_mask is None):
+        raise ValueError(
+            f"model family {model.config.family!r} has no ghost hooks "
+            f"(per_example_loss/ghost_mask); grad_mode='ghost' supports "
+            f"dense_lm, resnet and densenet — use grad_mode='vmap'")
+
+
+def make_dp_grad_fn(loss_fn: Callable, dp: DPConfig, *,
+                    per_example_loss: Callable = None,
+                    ghost_mask: Callable = None) -> Callable:
     """Returns ``dp_grad(params, batch, rng) -> (noisy_mean_grad, metrics)``.
 
     ``loss_fn(params, example, rng)``: scalar loss of a single example.
+    With ``dp.grad_mode="ghost"``, ``per_example_loss(params, batch, rng)
+    -> (B,)`` and ``ghost_mask(params) -> bool pytree`` must also be given
+    (the registry ``Model`` provides both for supported families).
     """
+    validate_grad_mode(dp)
+    if dp.grad_mode == "ghost" and (per_example_loss is None
+                                    or ghost_mask is None):
+        raise ValueError("grad_mode='ghost' requires per_example_loss and "
+                         "ghost_mask (see repro.models.registry.Model)")
 
     def dp_grad(params, batch, rng):
         clip_rng, noise_rng = jax.random.split(rng)
         batch_size = jax.tree_util.tree_leaves(batch)[0].shape[0]
-        grad_sum, metrics = per_example_clipped_grad_sum(
-            loss_fn, params, batch,
-            clip_norm=dp.clip_norm,
-            microbatch_size=dp.microbatch_size,
-            rng=clip_rng)
+        if dp.grad_mode == "ghost":
+            grad_sum, metrics = ghost_clipped_grad_sum(
+                loss_fn, per_example_loss, params, batch,
+                clip_norm=dp.clip_norm, rng=clip_rng,
+                hooked_mask=ghost_mask(params))
+        else:
+            grad_sum, metrics = per_example_clipped_grad_sum(
+                loss_fn, params, batch,
+                clip_norm=dp.clip_norm,
+                microbatch_size=dp.microbatch_size,
+                rng=clip_rng,
+                clip_backend=dp.clip_backend)
         noisy = add_gaussian_noise(
             grad_sum, clip_norm=dp.clip_norm,
             noise_multiplier=dp.noise_multiplier,

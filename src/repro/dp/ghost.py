@@ -1,0 +1,396 @@
+"""Ghost-norm two-pass DP-SGD gradient engine (``DPConfig.grad_mode="ghost"``).
+
+The vmap path (``repro.dp.clip``) materializes a full per-example gradient
+pytree via ``vmap(grad)``: O(B x params) live memory and B independent
+rank-1/rank-T weight-grad contractions per layer instead of one batched
+GEMM.  Ghost clipping removes both costs without changing the numbers:
+
+pass 1 — norms
+    One vmapped forward+backward in which every *hooked* layer (the
+    ``qeinsum`` projections and ``qconv2d`` convolutions the models already
+    thread through ``repro.quant.fake_quant``) contributes its per-example
+    squared weight-grad norm to a scalar "tap" input through a custom VJP,
+    without ever forming the per-example weight grad:
+
+        || x^T g ||_F^2  =  < x x^T , g g^T >        (Gram identity)
+
+    computed as two (T, T) Grams (T = tokens/pixels per example) when
+    T^2 < |w|, or as the direct (din, dout) contraction followed by an
+    immediate square-reduce when the layer is small (mixed ghost norm).
+    Non-hooked leaves (norm scales, embeddings, heads) fall back to a
+    vmapped *norm-only* per-example grad restricted to those leaves; the
+    hooked layers' per-example weight grads are never requested and XLA
+    dead-code-eliminates them.
+
+pass 2 — grads
+    ``jax.grad`` of the scale-reweighted per-example-loss sum
+    ``sum_i scale_i * loss_i`` over the *batched* (not vmapped) model:
+    one standard backward at full arithmetic intensity — each layer's
+    weight grad is a single (B*T, din) x (B*T, dout) GEMM that directly
+    yields the clipped gradient **sum**.
+
+Quantization parity
+-------------------
+The vmap path applies each stochastic quantizer per example (a (1, ...)
+tensor per vmap lane, per-tensor max scaling, and an unbatched key whose
+uniform draw is hoisted across lanes).  Pass 2 reproduces this exactly in
+batched form: under the ghost grad context, ``fake_quant`` quantizes the
+batched activation/cotangent operands *per example* (``jax.vmap`` of the
+backend quantizer over example slices with the shared key — identical
+draws, per-example alpha).  Because LUQ/INT4 use per-tensor max scaling
+they are exactly positively-scale-invariant, so quantizing the
+scale-reweighted cotangent equals reweighting the quantized cotangent:
+
+    Q(scale_i * g_i) = scale_i * Q(g_i)
+
+which is what makes the one-backward reweighting produce the same clipped
+sums as the vmap path to fp32 tolerance *with stochastic quantization
+enabled*.  Deterministic relative-rounding formats (fp8/bf16) are only
+approximately scale-invariant (deviation bounded by the format's relative
+precision); ``none`` is exact.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------- #
+# trace-time context: which ghost pass (if any) the model is being traced for
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _NormCtx:
+    """Pass 1: hooked ops add per-example squared norms to ``tap``."""
+    tap: jax.Array
+    mode: str = "norm"
+
+
+@dataclasses.dataclass
+class _GradCtx:
+    """Pass 2: quantizers switch to per-example (vmap-parity) semantics."""
+    mode: str = "grad"
+
+
+_STACK: List[object] = []
+
+
+def current():
+    """The active ghost context (or None) — consulted by fake_quant at
+    trace time; the returned context's behavior is baked into the traced
+    custom-VJP statics, so backward traces never re-read it."""
+    return _STACK[-1] if _STACK else None
+
+
+@contextlib.contextmanager
+def norm_pass(tap: jax.Array):
+    _STACK.append(_NormCtx(tap=tap))
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+@contextlib.contextmanager
+def grad_pass():
+    _STACK.append(_GradCtx())
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+# --------------------------------------------------------------------------- #
+# per-example squared weight-grad norms (the "ghost" in ghost clipping)
+# --------------------------------------------------------------------------- #
+def _matpair_sq_norm(xmat: jax.Array, gmat: jax.Array) -> jax.Array:
+    """||xmat^T gmat||_F^2 without materializing it when Grams are cheaper.
+
+    ``xmat``: (T, Din) wgrad-GEMM input rows; ``gmat``: (T, Dout) output
+    cotangent rows.  Static shape-based choice (mixed ghost norm): Gram
+    route costs O(T^2 (Din + Dout)) and peaks at two (T, T) buffers; the
+    direct route costs the plain wgrad GEMM but its (Din, Dout) product is
+    consumed by an immediate square-reduce (transient, fuses under XLA).
+    """
+    xmat = xmat.astype(jnp.float32)
+    gmat = gmat.astype(jnp.float32)
+    t = xmat.shape[0]
+    if t * t <= xmat.shape[1] * gmat.shape[1]:
+        return jnp.vdot(xmat @ xmat.T, gmat @ gmat.T)
+    dw = xmat.T @ gmat
+    return jnp.sum(dw * dw)
+
+
+@functools.lru_cache(maxsize=None)
+def _spec_axes(spec: str) -> Tuple[str, str, str, str, str, str]:
+    """Split an einsum spec into (x_term, w_term, out_term, T, din, dout).
+
+    T = x dims not contracted into w (batch/seq/pixels), din = x dims
+    shared with w, dout = w dims appearing in the output.  Covers every
+    projection spec the models use (no repeated or elided letters).
+    """
+    lhs, out_term = spec.replace(" ", "").split("->")
+    x_term, w_term = lhs.split(",")
+    t_ax = "".join(c for c in x_term if c not in w_term)
+    din = "".join(c for c in x_term if c in w_term)
+    dout = "".join(c for c in w_term if c not in x_term)
+    if set(t_ax) - set(out_term) or set(dout) - set(out_term):
+        raise ValueError(f"einsum spec {spec!r} is not a ghost-hookable "
+                         f"projection (x-batch or w-out dims missing from "
+                         f"the output)")
+    return x_term, w_term, out_term, t_ax, din, dout
+
+
+def _einsum_sq_norm(spec: str, xq: jax.Array, gq: jax.Array) -> jax.Array:
+    """Per-example ||dw||^2 of ``out = einsum(spec, x, w)`` from the wgrad
+    GEMM inputs (already quantized when q_wgrad is on)."""
+    x_term, _, out_term, t_ax, din, dout = _spec_axes(spec)
+    sizes = {**dict(zip(x_term, xq.shape)), **dict(zip(out_term, gq.shape))}
+    xmat = jnp.einsum(f"{x_term}->{t_ax}{din}", xq).reshape(
+        int(np.prod([sizes[c] for c in t_ax], initial=1)),
+        int(np.prod([sizes[c] for c in din], initial=1)))
+    gmat = jnp.einsum(f"{out_term}->{t_ax}{dout}", gq).reshape(
+        int(np.prod([sizes[c] for c in t_ax], initial=1)),
+        int(np.prod([sizes[c] for c in dout], initial=1)))
+    return _matpair_sq_norm(xmat, gmat)
+
+
+# --------------------------------------------------------------------------- #
+# ghost-hooked primitives (pass 1): qeinsum / qconv2d clones whose backward
+# also emits the per-example squared wgrad norm as the tap cotangent
+# --------------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=None)
+def make_ghost_qeinsum(spec: str, fmt: str, q_fwd: bool, q_dgrad: bool,
+                       q_wgrad: bool, backend: str):
+    """Ghost-tapped variant of ``fake_quant._make_qeinsum``.
+
+    Forward/dgrad/wgrad quantization is identical to the plain qeinsum
+    (same folds, same keys); the extra ``tap`` argument does not affect
+    the output — its cotangent is *defined* to be the per-example squared
+    wgrad norm, computed from the same Q(x, fold 4) / Q(g, fold 5) inputs
+    the wgrad GEMM consumes, so pass-1 norms match the vmap path's norms
+    of actually-quantized per-example grads.
+    """
+    from repro.quant.fake_quant import _maybe_quant
+
+    def einsum(x, w):
+        return jnp.einsum(spec, x, w)
+
+    @jax.custom_vjp
+    def gqeinsum(x, w, seed, flag, tap):
+        del tap
+        xq = _maybe_quant(x, seed, 0, fmt, flag, backend) if q_fwd else x
+        wq = _maybe_quant(w, seed, 1, fmt, flag, backend) if q_fwd else w
+        return einsum(xq, wq)
+
+    def fwd(x, w, seed, flag, tap):
+        return gqeinsum(x, w, seed, flag, tap), (x, w, seed, flag)
+
+    def bwd(res, g):
+        x, w, seed, flag = res
+        wq = _maybe_quant(w, seed, 2, fmt, flag, backend) if q_dgrad else w
+        gq_d = _maybe_quant(g, seed, 3, fmt, flag, backend) if q_dgrad else g
+        (dx,) = jax.linear_transpose(lambda t: einsum(t, wq), x)(gq_d)
+        xq = _maybe_quant(x, seed, 4, fmt, flag, backend) if q_wgrad else x
+        gq_w = _maybe_quant(g, seed, 5, fmt, flag, backend) if q_wgrad else g
+        # dw is only consumed when a caller differentiates the hooked
+        # weight through a norm pass (pass 1 never does -> DCE'd by XLA)
+        (dw,) = jax.linear_transpose(lambda t: einsum(xq, t), w)(gq_w)
+        dtap = _einsum_sq_norm(spec, xq, gq_w)
+        return dx, dw, None, None, dtap
+
+    gqeinsum.defvjp(fwd, bwd)
+    return gqeinsum
+
+
+@functools.lru_cache(maxsize=None)
+def make_ghost_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
+                     strides: tuple, padding: str, dnums_key: tuple,
+                     filter_hw: tuple, backend: str):
+    """Ghost-tapped variant of ``fake_quant._make_qconv`` (NHWC/HWIO).
+
+    The per-example conv wgrad is ``patches(x)^T @ g`` (unfold-einsum):
+    ``conv_general_dilated_patches`` with the conv's own strides/padding
+    yields one (T, kh*kw*Cin) row per output position, aligned with the
+    (T, Cout) cotangent rows, and the shared ``_matpair_sq_norm`` picks
+    Gram vs direct per layer.
+    """
+    from repro.quant.fake_quant import _maybe_quant
+
+    dn = jax.lax.ConvDimensionNumbers(*dnums_key)
+
+    def conv(x, w):
+        return jax.lax.conv_general_dilated(x, w, strides, padding,
+                                            dimension_numbers=dn)
+
+    @jax.custom_vjp
+    def gqconv(x, w, seed, flag, tap):
+        del tap
+        xq = _maybe_quant(x, seed, 0, fmt, flag, backend) if q_fwd else x
+        wq = _maybe_quant(w, seed, 1, fmt, flag, backend) if q_fwd else w
+        return conv(xq, wq)
+
+    def fwd(x, w, seed, flag, tap):
+        return gqconv(x, w, seed, flag, tap), (x, w, seed, flag)
+
+    def bwd(res, g):
+        x, w, seed, flag = res
+        wq = _maybe_quant(w, seed, 2, fmt, flag, backend) if q_dgrad else w
+        gq_d = _maybe_quant(g, seed, 3, fmt, flag, backend) if q_dgrad else g
+        (dx,) = jax.linear_transpose(lambda t: conv(t, wq), x)(gq_d)
+        xq = _maybe_quant(x, seed, 4, fmt, flag, backend) if q_wgrad else x
+        gq_w = _maybe_quant(g, seed, 5, fmt, flag, backend) if q_wgrad else g
+        (dw,) = jax.linear_transpose(lambda t: conv(xq, t), w)(gq_w)
+        patches = jax.lax.conv_general_dilated_patches(
+            xq, filter_hw, strides, padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dtap = _matpair_sq_norm(patches.reshape(-1, patches.shape[-1]),
+                                gq_w.reshape(-1, gq_w.shape[-1]))
+        return dx, dw, None, None, dtap
+
+    gqconv.defvjp(fwd, bwd)
+    return gqconv
+
+
+# --------------------------------------------------------------------------- #
+# per-example quantization (pass 2): vmap-parity semantics on batched tensors
+# --------------------------------------------------------------------------- #
+def per_example_quantizer(q: Callable) -> Callable:
+    """Wrap ``q(v, key)`` so a batched (B, ...) tensor is quantized exactly
+    like B vmapped (1, ...) per-example tensors: per-example max scaling,
+    and one hoisted uniform draw shared across examples (the key does not
+    depend on the lane, so ``vmap`` hoists it — bit-identical to the vmap
+    path's draws)."""
+
+    def qpe(v, key):
+        return jax.vmap(lambda vi: q(vi[None], key)[0])(v)
+
+    return qpe
+
+
+# --------------------------------------------------------------------------- #
+# param partitioning: hooked (ghost-normed) vs non-hooked (vmapped fallback)
+# --------------------------------------------------------------------------- #
+def _mask_leaves(params, hooked_mask):
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    m_struct = jax.tree_util.tree_structure(hooked_mask)
+    if m_struct != treedef:
+        raise ValueError("ghost hooked_mask structure does not match params "
+                         f"({m_struct} vs {treedef})")
+    m_leaves = [bool(m) for m in jax.tree_util.tree_leaves(hooked_mask)]
+    return p_leaves, m_leaves, treedef
+
+
+def per_example_state_bytes(params, hooked_mask, batch_size: int,
+                            itemsize: int = 4) -> dict:
+    """Analytic estimate of per-example gradient state (the memory term
+    that scales with batch size) for the two grad modes.
+
+    vmap materializes every parameter per example; ghost only materializes
+    the non-hooked fallback leaves (Gram buffers are O(B * T^2) transients
+    and are excluded — see benchmarks/dp_throughput.py).
+    """
+    p_leaves, m_leaves, _ = _mask_leaves(params, hooked_mask)
+    total = sum(int(np.prod(l.shape)) for l in p_leaves)
+    nonhooked = sum(int(np.prod(l.shape))
+                    for l, m in zip(p_leaves, m_leaves) if not m)
+    return {
+        "params_total": total,
+        "params_nonhooked": nonhooked,
+        "vmap_bytes": batch_size * total * itemsize,
+        "ghost_bytes": batch_size * nonhooked * itemsize,
+    }
+
+
+# --------------------------------------------------------------------------- #
+# the two-pass driver
+# --------------------------------------------------------------------------- #
+def ghost_per_example_norms(loss_fn: Callable, params, batch, *,
+                            rng: jax.Array, hooked_mask
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Pass 1 alone: ``(per_example_losses, per_example_global_norms)``.
+
+    ``loss_fn(params, example, rng)`` is the per-example loss the vmap path
+    consumes; the returned norms match ``vmap(grad)`` global l2 norms (of
+    the actually-quantized per-example grads) to fp32 tolerance.
+    """
+    p_leaves, m_leaves, treedef = _mask_leaves(params, hooked_mask)
+    nonhooked = [l for l, m in zip(p_leaves, m_leaves) if not m]
+
+    def rebuild(nh):
+        it = iter(nh)
+        return jax.tree_util.tree_unflatten(
+            treedef,
+            [l if m else next(it) for l, m in zip(p_leaves, m_leaves)])
+
+    def tapped_loss(nh, tap, ex):
+        with norm_pass(tap):
+            return loss_fn(rebuild(nh), ex, rng)
+
+    def one_example(ex):
+        loss, (g_nh, dtap) = jax.value_and_grad(
+            tapped_loss, argnums=(0, 1))(nonhooked, jnp.float32(0.0), ex)
+        sq = dtap + sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in g_nh)
+        return loss, sq
+
+    losses, sq_norms = jax.vmap(one_example)(batch)
+    return losses, jnp.sqrt(sq_norms)
+
+
+def ghost_clipped_grad_sum(
+    loss_fn: Callable,
+    per_example_loss_fn: Callable,
+    params,
+    batch,
+    *,
+    clip_norm: float,
+    rng: jax.Array,
+    hooked_mask,
+    accum_dtype=jnp.float32,
+) -> Tuple[object, dict]:
+    """Sum over the batch of per-example clipped gradients, ghost style.
+
+    ``loss_fn(params, example, rng)``: scalar loss of ONE example (the same
+    callable the vmap path consumes — used for pass 1).
+    ``per_example_loss_fn(params, batch, rng) -> (B,)``: batched per-example
+    losses (used for pass 2's single reweighted backward).
+    ``hooked_mask``: bool pytree matching ``params`` — True leaves are
+    covered by ghost hooks (their norms arrive via the tap), False leaves
+    go through the vmapped norm-only fallback.
+
+    Returns ``(grad_sum, metrics)`` with the same metrics contract as
+    ``repro.dp.clip.per_example_clipped_grad_sum``; the whole batch is
+    processed as one fused pass (no microbatching — flat per-example
+    state is the point of the mode).
+    """
+    r = jax.random.fold_in(rng, 0)   # the vmap path's microbatch-0 fold
+
+    # ---- pass 1: per-example global norms ----
+    losses, norms = ghost_per_example_norms(
+        loss_fn, params, batch, rng=r, hooked_mask=hooked_mask)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
+    scale = jax.lax.stop_gradient(scale)
+
+    # ---- pass 2: one reweighted batched backward ----
+    def weighted_loss(p):
+        with grad_pass():
+            pel = per_example_loss_fn(p, batch, r)
+        return jnp.vdot(scale, pel.astype(jnp.float32))
+
+    grads = jax.grad(weighted_loss)(params)
+    grad_sum = jax.tree_util.tree_map(lambda g: g.astype(accum_dtype), grads)
+
+    n = losses.shape[0]
+    metrics = {
+        "loss": losses.astype(jnp.float32).sum() / n,
+        "grad_norm_mean": norms.mean(),
+        "grad_norm_max": norms.max(),
+        "clip_fraction": (norms > clip_norm).mean(),
+    }
+    return grad_sum, metrics

@@ -18,6 +18,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import RunConfig
 from repro.dp.clip import per_example_clipped_grad_sum
+from repro.dp.engine import validate_grad_mode
+from repro.dp.ghost import ghost_clipped_grad_sum
 from repro.dp.noise import add_gaussian_noise
 from repro.models.registry import Model
 from repro.optim import make_optimizer, apply_updates
@@ -66,6 +68,8 @@ def build_train_setup(model: Model, run: RunConfig, mesh: Mesh,
                       batch_size: Optional[int] = None,
                       seq_len: Optional[int] = None) -> TrainSetup:
     cfg = model.config
+    if run.dp.enabled:
+        validate_grad_mode(run.dp, model)
     rules = pt.merge_rules(pt.DEFAULT_RULES, cfg.sharding_overrides)
     resolver = pt.activation_resolver(mesh, rules)
     opt = make_optimizer(run.optim)
@@ -136,7 +140,20 @@ def build_train_setup(model: Model, run: RunConfig, mesh: Mesh,
                 b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
                 return model.loss_fn(p, b1, r, qflags)
 
-            if run.dp.enabled:
+            if run.dp.enabled and run.dp.grad_mode == "ghost":
+                def pel(p, b, r):
+                    return model.per_example_loss(p, b, r, qflags)
+
+                grad_sum, metrics = ghost_clipped_grad_sum(
+                    loss_one, pel, params, batch,
+                    clip_norm=run.dp.clip_norm, rng=clip_rng,
+                    hooked_mask=model.ghost_mask(params),
+                    accum_dtype=accum_dtype)
+                grads = add_gaussian_noise(
+                    grad_sum, clip_norm=run.dp.clip_norm,
+                    noise_multiplier=run.dp.noise_multiplier,
+                    batch_size=B, rng=noise_rng)
+            elif run.dp.enabled:
                 grad_sum, metrics = per_example_clipped_grad_sum(
                     loss_one, params, batch,
                     clip_norm=run.dp.clip_norm, microbatch_size=mb,

@@ -44,6 +44,11 @@ def main(argv=None):
                     choices=["ref", "fused"],
                     help="per-example clip path: jnp reference or the fused "
                          "Pallas clip+sum kernel")
+    ap.add_argument("--grad-mode", default="vmap",
+                    choices=["vmap", "ghost"],
+                    help="per-example gradient engine: vmap(grad) "
+                         "materialization or two-pass ghost-norm clipping "
+                         "(docs/ARCHITECTURE.md 'DP gradient modes')")
     ap.add_argument("--quant-fraction", type=float, default=0.9)
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--steps-per-epoch", type=int, default=10)
@@ -78,7 +83,8 @@ def main(argv=None):
                     noise_multiplier=args.noise_multiplier,
                     microbatch_size=args.microbatch,
                     quant_fraction=args.quant_fraction,
-                    clip_backend=args.clip_backend),
+                    clip_backend=args.clip_backend,
+                    grad_mode=args.grad_mode),
         optim=OptimConfig(name=args.optimizer, lr=args.lr),
         global_batch=args.batch, seq_len=args.seq_len,
         steps_per_epoch=args.steps_per_epoch,

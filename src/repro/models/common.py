@@ -153,19 +153,23 @@ def repeat_kv(x, n_rep: int):
 # losses
 # --------------------------------------------------------------------------- #
 def chunked_lm_loss(h, targets, embed, *, real_vocab: int, ce_chunk: int,
-                    mask=None):
+                    mask=None, per_example: bool = False):
     """Mean next-token cross-entropy without materializing (B, S, V).
 
     h: (B, S, d) hidden states aligned with ``targets`` (B, S) int32.
     embed: (V_pad, d) — logits = h @ embed.T computed per sequence chunk.
     ``mask``: optional (B, S) 0/1 loss mask.
+    ``per_example=True`` returns the (B,) vector of per-example mean NLLs
+    (each equal to the scalar loss of that example alone — the ghost
+    grad-engine's reweighting target) instead of the batch mean.
     """
     b, s, dm = h.shape
     vpad = embed.shape[0]
     cc = min(ce_chunk, s)
     n_chunks = (s + cc - 1) // cc
-    total = jnp.float32(0.0)
-    denom = jnp.float32(0.0)
+    zero = jnp.zeros((b,), jnp.float32) if per_example else jnp.float32(0.0)
+    total, denom = zero, zero
+    reduce_axes = (1,) if per_example else None
     vocab_ids = jnp.arange(vpad)
     for i in range(n_chunks):
         s0, s1 = i * cc, min((i + 1) * cc, s)
@@ -179,19 +183,20 @@ def chunked_lm_loss(h, targets, embed, *, real_vocab: int, ce_chunk: int,
         nll = lse - tgt
         if mask is not None:
             mc = mask[:, s0:s1].astype(jnp.float32)
-            total += (nll * mc).sum()
-            denom += mc.sum()
+            total += (nll * mc).sum(axis=reduce_axes)
+            denom += mc.sum(axis=reduce_axes)
         else:
-            total += nll.sum()
-            denom += jnp.float32(nll.size)
+            total += nll.sum(axis=reduce_axes)
+            denom += jnp.float32(nll.size / b if per_example else nll.size)
     return total / jnp.maximum(denom, 1.0)
 
 
-def softmax_xent(logits, labels):
+def softmax_xent(logits, labels, per_example: bool = False):
     lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
     tgt = jnp.take_along_axis(logits.astype(jnp.float32),
                               labels[..., None], axis=-1)[..., 0]
-    return (lse - tgt).mean()
+    nll = lse - tgt
+    return nll if per_example else nll.mean()
 
 
 # --------------------------------------------------------------------------- #

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, QuantConfig
 from repro.models import common as cm
+from repro.models import resnet
 from repro.models.registry import Model, register_family
 from repro.quant.fake_quant import qconv2d
 
@@ -117,10 +118,11 @@ def forward(params, image, qflags, cfg: ModelConfig, quant: QuantConfig):
     return x @ params["head"]["w"] + params["head"]["b"]
 
 
-def loss_fn(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig):
+def loss_fn(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig,
+            per_example: bool = False):
     del rng
     logits = forward(params, batch["image"], qflags, cfg, quant)
-    return cm.softmax_xent(logits, batch["label"])
+    return cm.softmax_xent(logits, batch["label"], per_example=per_example)
 
 
 @register_family("densenet")
@@ -141,4 +143,7 @@ def build_densenet(cfg: ModelConfig, quant: QuantConfig) -> Model:
         loss_fn=functools.partial(loss_fn, cfg=cfg, quant=quant),
         batch_spec=batch_spec,
         batch_axes=batch_axes,
+        per_example_loss=functools.partial(loss_fn, cfg=cfg, quant=quant,
+                                           per_example=True),
+        ghost_mask=resnet.conv_ghost_mask,
     )

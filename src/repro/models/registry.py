@@ -32,6 +32,14 @@ class Model:
     # which slots advance this tick.
     decode_slots: Optional[Callable] = None
     slot_cache_spec: Optional[Callable] = None  # (n_slots, max_seq) -> specs
+    # ghost-clipping support (repro.dp.ghost; DPConfig.grad_mode="ghost"):
+    # per_example_loss(params, batch, rng, qflags) -> (B,) batched losses
+    # (row i == loss_fn on example i alone); ghost_mask(params) -> bool
+    # pytree marking the leaves whose per-example grad norms are covered
+    # by the qeinsum/qconv2d ghost hooks (False leaves use the vmapped
+    # norm-only fallback).
+    per_example_loss: Optional[Callable] = None
+    ghost_mask: Optional[Callable] = None
 
     @property
     def n_policy_layers(self) -> int:

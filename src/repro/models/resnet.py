@@ -173,10 +173,24 @@ def forward(params, image, qflags, cfg: ModelConfig, quant: QuantConfig):
     return x @ params["head"]["w"] + params["head"]["b"]
 
 
-def loss_fn(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig):
+def loss_fn(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig,
+            per_example: bool = False):
     del rng
     logits = forward(params, batch["image"], qflags, cfg, quant)
-    return cm.softmax_xent(logits, batch["label"])
+    return cm.softmax_xent(logits, batch["label"], per_example=per_example)
+
+
+def conv_ghost_mask(params):
+    """Ghost hooks cover every qconv2d kernel (stem/blocks/projections);
+    GroupNorm scales/biases and the dense head use the vmapped fallback.
+    Shared by the resnet and densenet families (leaf-name convention:
+    conv kernels live under a ``conv*``/``proj`` dict key)."""
+    def mark(path, _):
+        keys = [p.key for p in path
+                if isinstance(p, jax.tree_util.DictKey)]
+        return bool(keys) and (keys[-1].startswith("conv")
+                               or keys[-1] == "proj")
+    return jax.tree_util.tree_map_with_path(mark, params)
 
 
 @register_family("resnet")
@@ -197,4 +211,7 @@ def build_resnet(cfg: ModelConfig, quant: QuantConfig) -> Model:
         loss_fn=functools.partial(loss_fn, cfg=cfg, quant=quant),
         batch_spec=batch_spec,
         batch_axes=batch_axes,
+        per_example_loss=functools.partial(loss_fn, cfg=cfg, quant=quant,
+                                           per_example=True),
+        ghost_mask=conv_ghost_mask,
     )

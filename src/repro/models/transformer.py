@@ -186,7 +186,7 @@ def forward_hidden(params, tokens, qflags, cfg: ModelConfig,
 
 
 def lm_loss(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig,
-            loss_mask_prefix: int = 0):
+            loss_mask_prefix: int = 0, per_example: bool = False):
     del rng
     tokens = batch["tokens"]
     h = forward_hidden(params, tokens, qflags, cfg, quant,
@@ -199,7 +199,23 @@ def lm_loss(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig,
             * jnp.ones((tokens.shape[0], 1), jnp.float32)
     return cm.chunked_lm_loss(h[:, :-1], tokens[:, 1:], head,
                               real_vocab=cfg.vocab_size,
-                              ce_chunk=cfg.ce_chunk, mask=mask)
+                              ce_chunk=cfg.ce_chunk, mask=mask,
+                              per_example=per_example)
+
+
+# Ghost-clipping hooks (repro.dp.ghost): every block projection runs
+# through cm.qproj -> qeinsum and therefore carries a ghost norm hook;
+# norms, embeddings and (untied) lm_head use the vmapped fallback.
+_GHOST_HOOKED_LEAVES = frozenset(
+    ("wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wo_mlp"))
+
+
+def ghost_mask(params):
+    def mark(path, _):
+        keys = [p.key for p in path
+                if isinstance(p, jax.tree_util.DictKey)]
+        return bool(keys) and keys[-1] in _GHOST_HOOKED_LEAVES
+    return jax.tree_util.tree_map_with_path(mark, params)
 
 
 # --------------------------------------------------------------------------- #
@@ -440,4 +456,7 @@ def build_dense_lm(cfg: ModelConfig, quant: QuantConfig) -> Model:
         cache_axes=lambda: kv_cache_axes(cfg),
         decode_slots=functools.partial(decode_slots, cfg=cfg, quant=quant),
         slot_cache_spec=functools.partial(slot_cache_spec, cfg),
+        per_example_loss=functools.partial(lm_loss, cfg=cfg, quant=quant,
+                                           per_example=True),
+        ghost_mask=ghost_mask,
     )

@@ -24,6 +24,12 @@ with (seed=s+1, fold=0), correlating draws across adjacent steps/GEMMs.
 ``backend`` selects the quantizer implementation through
 ``repro.quant.backend`` ("ref" jnp formats or the "pallas" fused kernels);
 the ``REPRO_QUANT_BACKEND`` env var overrides it globally.
+
+Ghost-clipping integration (``repro.dp.ghost``): when a ghost context is
+active at trace time, ``qeinsum``/``qconv2d`` route to the ghost-tapped
+custom-VJP variants (norm pass) or enable per-example quantization
+semantics on the batched activation/cotangent operands (grad pass) — see
+the module docstring of ``repro.dp.ghost`` for the parity argument.
 """
 from __future__ import annotations
 
@@ -37,11 +43,20 @@ from repro.quant import backend as qbackend
 
 
 def _maybe_quant(x, seed: jax.Array, fold: int, fmt: str, flag: jax.Array,
-                 backend: str = "ref"):
-    """Quantize ``x`` when ``flag > 0.5``, else pass through. ``seed`` uint32."""
+                 backend: str = "ref", per_example: bool = False):
+    """Quantize ``x`` when ``flag > 0.5``, else pass through. ``seed`` uint32.
+
+    ``per_example=True`` (ghost grad pass, batched operands only) applies
+    the quantizer to each (1, ...) example slice with the shared key —
+    per-example max scaling and hoisted draws, bit-matching the vmap DP
+    path's per-lane quantization (repro.dp.ghost.per_example_quantizer).
+    """
     if fmt == "none":
         return x
     q, _ = qbackend.get_quantizer(fmt, backend)
+    if per_example:
+        from repro.dp.ghost import per_example_quantizer
+        q = per_example_quantizer(q)
 
     def do_q(v):
         key = jax.random.fold_in(
@@ -53,15 +68,21 @@ def _maybe_quant(x, seed: jax.Array, fold: int, fmt: str, flag: jax.Array,
 
 @functools.lru_cache(maxsize=None)
 def _make_qeinsum(spec: str, fmt: str, q_fwd: bool, q_dgrad: bool,
-                  q_wgrad: bool, backend: str):
-    """Build a custom-VJP einsum with quantized fwd/dgrad/wgrad GEMM inputs."""
+                  q_wgrad: bool, backend: str, per_example: bool = False):
+    """Build a custom-VJP einsum with quantized fwd/dgrad/wgrad GEMM inputs.
+
+    ``per_example`` switches the *batched* operands (activation ``x`` and
+    cotangent ``g`` — never the weight) to per-example quantization for
+    the ghost grad pass.
+    """
 
     def einsum(x, w):
         return jnp.einsum(spec, x, w)
 
     @jax.custom_vjp
     def qeinsum(x, w, seed, flag):
-        xq = _maybe_quant(x, seed, 0, fmt, flag, backend) if q_fwd else x
+        xq = (_maybe_quant(x, seed, 0, fmt, flag, backend, per_example)
+              if q_fwd else x)
         wq = _maybe_quant(w, seed, 1, fmt, flag, backend) if q_fwd else w
         return einsum(xq, wq)
 
@@ -72,12 +93,15 @@ def _make_qeinsum(spec: str, fmt: str, q_fwd: bool, q_dgrad: bool,
         x, w, seed, flag = res
         # dgrad: dx = GEMM(Q(g), Q(w)) via the transpose of y = einsum(x, w).
         wq = _maybe_quant(w, seed, 2, fmt, flag, backend) if q_dgrad else w
-        gq_d = _maybe_quant(g, seed, 3, fmt, flag, backend) if q_dgrad else g
+        gq_d = (_maybe_quant(g, seed, 3, fmt, flag, backend, per_example)
+                if q_dgrad else g)
         dx_fn = jax.linear_transpose(lambda t: einsum(t, wq), x)
         (dx,) = dx_fn(gq_d)
         # wgrad: dw = GEMM(Q(x), Q(g)).
-        xq = _maybe_quant(x, seed, 4, fmt, flag, backend) if q_wgrad else x
-        gq_w = _maybe_quant(g, seed, 5, fmt, flag, backend) if q_wgrad else g
+        xq = (_maybe_quant(x, seed, 4, fmt, flag, backend, per_example)
+              if q_wgrad else x)
+        gq_w = (_maybe_quant(g, seed, 5, fmt, flag, backend, per_example)
+                if q_wgrad else g)
         dw_fn = jax.linear_transpose(lambda t: einsum(xq, t), w)
         (dw,) = dw_fn(gq_w)
         return dx, dw, None, None
@@ -94,15 +118,24 @@ def qeinsum(spec: str, x: jax.Array, w: jax.Array, *, seed: jax.Array,
     # Resolve env override *before* the lru_cache key so flipping
     # REPRO_QUANT_BACKEND mid-process cannot serve a stale closure.
     backend = qbackend.resolve_backend(backend)
-    fn = _make_qeinsum(spec, fmt, q_fwd, q_dgrad, q_wgrad, backend)
     seed = jnp.asarray(seed, jnp.uint32)
     flag = jnp.asarray(flag, jnp.float32)
+    from repro.dp import ghost
+    ctx = ghost.current()
+    if ctx is not None and ctx.mode == "norm":
+        fn = ghost.make_ghost_qeinsum(spec, fmt, q_fwd, q_dgrad, q_wgrad,
+                                      backend)
+        return fn(x, w, seed, flag, ctx.tap)
+    per_example = ctx is not None and ctx.mode == "grad"
+    fn = _make_qeinsum(spec, fmt, q_fwd, q_dgrad, q_wgrad, backend,
+                       per_example)
     return fn(x, w, seed, flag)
 
 
 @functools.lru_cache(maxsize=None)
 def _make_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
-                strides: tuple, padding: str, dnums_key: tuple, backend: str):
+                strides: tuple, padding: str, dnums_key: tuple, backend: str,
+                per_example: bool = False):
     dn = jax.lax.ConvDimensionNumbers(*dnums_key)
 
     def conv(x, w):
@@ -111,7 +144,8 @@ def _make_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
 
     @jax.custom_vjp
     def qconv(x, w, seed, flag):
-        xq = _maybe_quant(x, seed, 0, fmt, flag, backend) if q_fwd else x
+        xq = (_maybe_quant(x, seed, 0, fmt, flag, backend, per_example)
+              if q_fwd else x)
         wq = _maybe_quant(w, seed, 1, fmt, flag, backend) if q_fwd else w
         return conv(xq, wq)
 
@@ -121,11 +155,14 @@ def _make_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
     def bwd(res, g):
         x, w, seed, flag = res
         wq = _maybe_quant(w, seed, 2, fmt, flag, backend) if q_dgrad else w
-        gq_d = _maybe_quant(g, seed, 3, fmt, flag, backend) if q_dgrad else g
+        gq_d = (_maybe_quant(g, seed, 3, fmt, flag, backend, per_example)
+                if q_dgrad else g)
         dx_fn = jax.linear_transpose(lambda t: conv(t, wq), x)
         (dx,) = dx_fn(gq_d)
-        xq = _maybe_quant(x, seed, 4, fmt, flag, backend) if q_wgrad else x
-        gq_w = _maybe_quant(g, seed, 5, fmt, flag, backend) if q_wgrad else g
+        xq = (_maybe_quant(x, seed, 4, fmt, flag, backend, per_example)
+              if q_wgrad else x)
+        gq_w = (_maybe_quant(g, seed, 5, fmt, flag, backend, per_example)
+                if q_wgrad else g)
         dw_fn = jax.linear_transpose(lambda t: conv(xq, t), w)
         (dw,) = dw_fn(gq_w)
         return dx, dw, None, None
@@ -142,8 +179,16 @@ def qconv2d(x: jax.Array, w: jax.Array, *, seed: jax.Array, flag: jax.Array,
     backend = qbackend.resolve_backend(backend)
     dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
                                         ("NHWC", "HWIO", "NHWC"))
-    fn = _make_qconv(fmt, q_fwd, q_dgrad, q_wgrad, tuple(strides), padding,
-                     tuple(dn), backend)
     seed = jnp.asarray(seed, jnp.uint32)
     flag = jnp.asarray(flag, jnp.float32)
+    from repro.dp import ghost
+    ctx = ghost.current()
+    if ctx is not None and ctx.mode == "norm":
+        fn = ghost.make_ghost_qconv(fmt, q_fwd, q_dgrad, q_wgrad,
+                                    tuple(strides), padding, tuple(dn),
+                                    tuple(w.shape[:2]), backend)
+        return fn(x, w, seed, flag, ctx.tap)
+    per_example = ctx is not None and ctx.mode == "grad"
+    fn = _make_qconv(fmt, q_fwd, q_dgrad, q_wgrad, tuple(strides), padding,
+                     tuple(dn), backend, per_example)
     return fn(x, w, seed, flag)

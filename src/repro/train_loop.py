@@ -80,6 +80,8 @@ class Trainer:
             raise ValueError(f"dp.clip_backend must be 'ref' or 'fused', "
                              f"got {run.dp.clip_backend!r}")
         self.model: Model = build_model(run.model, run.quant)
+        # grad_mode validation (incl. ghost-hook support for the family)
+        # happens in build_train_setup below, before any tracing
         self.mesh = mesh or make_host_mesh()
         self.setup = build_train_setup(self.model, run, self.mesh)
         self.step_fn = jax.jit(self.setup.step_fn,

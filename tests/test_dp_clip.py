@@ -61,6 +61,48 @@ def test_matches_manual_per_example():
     assert metrics["clip_fraction"] >= 0.0
 
 
+def test_partial_accum_non_divisible_mb_falls_back():
+    """partial_accum_shards that do not divide the microbatch fall back to
+    the plain (non-partial) accumulation and still produce identical sums."""
+    params = {"w": jnp.ones((5,)) * 1.5}
+    batch = make_batch()
+    base, _ = per_example_clipped_grad_sum(
+        quad_loss, params, batch, clip_norm=1.0, microbatch_size=4,
+        rng=jax.random.PRNGKey(0))
+    odd, _ = per_example_clipped_grad_sum(
+        quad_loss, params, batch, clip_norm=1.0, microbatch_size=4,
+        rng=jax.random.PRNGKey(0), partial_accum_shards=3)  # 4 % 3 != 0
+    np.testing.assert_allclose(np.asarray(odd["w"]), np.asarray(base["w"]),
+                               rtol=1e-6)
+    # divisible shards keep one partial sum per shard -> same total
+    div, _ = per_example_clipped_grad_sum(
+        quad_loss, params, batch, clip_norm=1.0, microbatch_size=4,
+        rng=jax.random.PRNGKey(0), partial_accum_shards=2)
+    np.testing.assert_allclose(np.asarray(div["w"]), np.asarray(base["w"]),
+                               rtol=1e-5)
+
+
+def test_fused_clip_rejects_partial_accum():
+    """The fused Pallas kernel sums the whole microbatch in-kernel and
+    cannot keep per-shard partials — must be an explicit error."""
+    params = {"w": jnp.ones((5,))}
+    batch = make_batch()
+    with pytest.raises(ValueError, match="partial_accum"):
+        per_example_clipped_grad_sum(
+            quad_loss, params, batch, clip_norm=1.0, microbatch_size=4,
+            rng=jax.random.PRNGKey(0), clip_backend="fused",
+            partial_accum_shards=2)
+
+
+def test_clip_backend_validated():
+    params = {"w": jnp.ones((5,))}
+    batch = make_batch()
+    with pytest.raises(ValueError, match="clip_backend"):
+        per_example_clipped_grad_sum(
+            quad_loss, params, batch, clip_norm=1.0, microbatch_size=4,
+            rng=jax.random.PRNGKey(0), clip_backend="bogus")
+
+
 def test_clip_by_global_norm():
     tree = {"a": jnp.ones((3,)) * 10, "b": jnp.ones((2, 2)) * -10}
     clipped, norm = clip_by_global_norm(tree, 1.0)

@@ -1,0 +1,320 @@
+"""Ghost-norm two-pass DP gradient engine: parity with the vmap path.
+
+The acceptance contract (docs/ARCHITECTURE.md "DP gradient modes"):
+``grad_mode="ghost"`` must reproduce the vmap path's clipped grad sums,
+per-example norms and clip metrics to fp32 tolerance — including with
+stochastic ``luq_fp4`` quantization enabled (LUQ's per-tensor max scaling
+is exactly positively-scale-invariant, and ghost mode quantizes batched
+operands per example with the vmap path's hoisted draws).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (DPConfig, ModelConfig, OptimConfig, QuantConfig,
+                          RunConfig)
+from repro.dp.clip import per_example_clipped_grad_sum
+from repro.dp.engine import make_dp_grad_fn, validate_grad_mode
+from repro.dp.ghost import (ghost_clipped_grad_sum, ghost_per_example_norms,
+                            per_example_state_bytes)
+from repro.models.registry import build_model
+
+
+# --------------------------------------------------------------------------- #
+# fixtures
+# --------------------------------------------------------------------------- #
+def lm_cfg(**kw):
+    base = dict(name="ghost-lm", family="dense_lm", n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=128,
+                compute_dtype="float32", remat=True)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def resnet_cfg(**kw):
+    base = dict(name="ghost-rn", family="resnet", resnet_blocks=(1, 1),
+                num_classes=8, image_size=16, compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def densenet_cfg():
+    return ModelConfig(name="ghost-dn", family="densenet",
+                       densenet_blocks=(2, 2), growth_rate=8, num_classes=8,
+                       image_size=16, compute_dtype="float32")
+
+
+def make_batch(cfg, B, seed=1):
+    if cfg.family == "dense_lm":
+        return {"tokens": jax.random.randint(jax.random.PRNGKey(seed),
+                                             (B, 16), 0, cfg.vocab_size)}
+    s = cfg.image_size
+    return {"image": jax.random.normal(jax.random.PRNGKey(seed),
+                                       (B, s, s, cfg.in_channels)),
+            "label": jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                        (B,), 0, cfg.num_classes)}
+
+
+def both_paths(cfg, fmt, B=6, clip_norm=0.8, mb=None):
+    """(vmap_out, ghost_out, vmap_norms, ghost_norms) for one config."""
+    model = build_model(cfg, QuantConfig(fmt=fmt))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B)
+    qflags = jnp.ones((cfg.policy_len(),), jnp.float32)
+
+    def loss_one(p, ex, r):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        return model.loss_fn(p, b1, r, qflags)
+
+    def pel(p, b, r):
+        return model.per_example_loss(p, b, r, qflags)
+
+    rng = jax.random.PRNGKey(42)
+    vm = jax.jit(lambda p, b: per_example_clipped_grad_sum(
+        loss_one, p, b, clip_norm=clip_norm, microbatch_size=mb or B,
+        rng=rng))(params, batch)
+    gh = jax.jit(lambda p, b: ghost_clipped_grad_sum(
+        loss_one, pel, p, b, clip_norm=clip_norm, rng=rng,
+        hooked_mask=model.ghost_mask(p)))(params, batch)
+
+    # per-example norms: vmap reference computed directly
+    def one_norm(ex):
+        g = jax.grad(loss_one)(params, ex, jax.random.fold_in(rng, 0))
+        return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                            for l in jax.tree_util.tree_leaves(g)))
+
+    vmap_norms = jax.jit(jax.vmap(one_norm))(batch)
+    _, ghost_norms = jax.jit(lambda p, b: ghost_per_example_norms(
+        loss_one, p, b, rng=jax.random.fold_in(rng, 0),
+        hooked_mask=model.ghost_mask(p)))(params, batch)
+    return vm, gh, vmap_norms, ghost_norms
+
+
+def assert_tree_close(a, b, rtol=2e-4, atol=2e-5):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# --------------------------------------------------------------------------- #
+# parity: grad sums, per-example norms, metrics
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("fmt", ["none", "luq_fp4"])
+@pytest.mark.parametrize("family", ["dense_lm", "resnet"])
+def test_ghost_matches_vmap(family, fmt):
+    cfg = lm_cfg() if family == "dense_lm" else resnet_cfg()
+    _assert_parity(cfg, fmt)
+
+
+def test_ghost_matches_vmap_densenet():
+    """DenseNet shares resnet's conv_ghost_mask — parity guards the
+    leaf-naming convention the mask relies on (a conv leaf renamed out of
+    the mask would silently drop its norm contribution)."""
+    _assert_parity(densenet_cfg(), "luq_fp4", B=4)
+
+
+def _assert_parity(cfg, fmt, B=6):
+    (gv, mv), (gg, mg), vmap_norms, ghost_norms = both_paths(cfg, fmt, B=B)
+    assert_tree_close(gv, gg)
+    np.testing.assert_allclose(np.asarray(ghost_norms),
+                               np.asarray(vmap_norms), rtol=1e-4)
+    for k in ("loss", "grad_norm_mean", "grad_norm_max", "clip_fraction"):
+        np.testing.assert_allclose(float(mv[k]), float(mg[k]), rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_ghost_matches_vmap_untied_head():
+    """lm_head (untied) is a non-hooked leaf — exercises the fallback."""
+    cfg = lm_cfg(tie_embeddings=False)
+    (gv, _), (gg, _), vn, gn = both_paths(cfg, "luq_fp4")
+    assert_tree_close(gv, gg)
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(vn), rtol=1e-4)
+
+
+def test_ghost_matches_vmap_strided_bottleneck():
+    """ResNet-50-style bottleneck blocks: stride-2 convs + projections."""
+    cfg = resnet_cfg(resnet_blocks=(3, 3, 2, 1))   # bottleneck threshold > 8
+    (gv, _), (gg, _), vn, gn = both_paths(cfg, "none", B=4)
+    assert_tree_close(gv, gg)
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(vn), rtol=1e-4)
+
+
+def test_ghost_clips_when_norms_exceed():
+    """Small clip norm: every example clipped, sums bounded."""
+    cfg = resnet_cfg()
+    C = 0.05
+    (_, mv), (gg, mg), _, _ = both_paths(cfg, "none", clip_norm=C)
+    assert float(mg["clip_fraction"]) == 1.0 == float(mv["clip_fraction"])
+    total = float(jnp.sqrt(sum(
+        jnp.sum(jnp.square(l)) for l in jax.tree_util.tree_leaves(gg))))
+    assert total <= 6 * C + 1e-5
+
+
+def test_ghost_partial_quant_flags():
+    """Mixed DPQuant policy (some layers quantized) keeps parity."""
+    cfg = lm_cfg()
+    model = build_model(cfg, QuantConfig(fmt="luq_fp4"))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4)
+    qflags = jnp.asarray([1.0, 0.0], jnp.float32)
+
+    def loss_one(p, ex, r):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        return model.loss_fn(p, b1, r, qflags)
+
+    def pel(p, b, r):
+        return model.per_example_loss(p, b, r, qflags)
+
+    rng = jax.random.PRNGKey(7)
+    gv, _ = jax.jit(lambda p, b: per_example_clipped_grad_sum(
+        loss_one, p, b, clip_norm=1.0, microbatch_size=4, rng=rng))(
+            params, batch)
+    gg, _ = jax.jit(lambda p, b: ghost_clipped_grad_sum(
+        loss_one, pel, p, b, clip_norm=1.0, rng=rng,
+        hooked_mask=model.ghost_mask(p)))(params, batch)
+    assert_tree_close(gv, gg)
+
+
+def test_ghost_engine_dp_grad_fn():
+    """make_dp_grad_fn(grad_mode='ghost') adds identical noise to matching
+    clipped sums -> noisy grads match the vmap engine."""
+    cfg = resnet_cfg()
+    model = build_model(cfg, QuantConfig(fmt="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4)
+    qflags = jnp.zeros((cfg.policy_len(),), jnp.float32)
+
+    def loss_one(p, ex, r):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        return model.loss_fn(p, b1, r, qflags)
+
+    def pel(p, b, r):
+        return model.per_example_loss(p, b, r, qflags)
+
+    outs = {}
+    for mode in ("vmap", "ghost"):
+        dp = DPConfig(grad_mode=mode, microbatch_size=4, clip_norm=1.0,
+                      noise_multiplier=0.5)
+        fn = make_dp_grad_fn(loss_one, dp,
+                             per_example_loss=pel,
+                             ghost_mask=model.ghost_mask)
+        outs[mode] = jax.jit(fn)(params, batch, jax.random.PRNGKey(3))[0]
+    assert_tree_close(outs["vmap"], outs["ghost"])
+
+
+# --------------------------------------------------------------------------- #
+# no-hook degenerate case: pure fallback == vmap path exactly
+# --------------------------------------------------------------------------- #
+def test_ghost_all_fallback_matches_vmap():
+    def quad_loss(params, ex, rng):
+        del rng
+        return 0.5 * jnp.sum((params["w"] * ex["x"] - ex["y"]) ** 2)
+
+    def pel(params, batch, rng):
+        return jax.vmap(lambda ex: quad_loss(params, ex, rng))(batch)
+
+    params = {"w": jnp.arange(1.0, 6.0)}
+    key = jax.random.PRNGKey(0)
+    batch = {"x": jax.random.normal(key, (8, 5)),
+             "y": jax.random.normal(jax.random.fold_in(key, 1), (8, 5))}
+    gv, mv = per_example_clipped_grad_sum(
+        quad_loss, params, batch, clip_norm=0.5, microbatch_size=8,
+        rng=jax.random.PRNGKey(0))
+    gg, mg = ghost_clipped_grad_sum(
+        quad_loss, pel, params, batch, clip_norm=0.5,
+        rng=jax.random.PRNGKey(0), hooked_mask={"w": False})
+    np.testing.assert_allclose(np.asarray(gg["w"]), np.asarray(gv["w"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(mg["grad_norm_max"]),
+                               float(mv["grad_norm_max"]), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# trainer integration: both epoch executors accept the mode
+# --------------------------------------------------------------------------- #
+def test_ghost_both_executors_and_vs_vmap():
+    from repro.data.synthetic import ImageClassDataset
+    from repro.train_loop import Trainer
+
+    model = resnet_cfg()
+    ds = ImageClassDataset(n=64, num_classes=8, image_size=16, noise=0.4)
+
+    def run_of(mode, executor):
+        return RunConfig(
+            model=model, quant=QuantConfig(fmt="luq_fp4"),
+            dp=DPConfig(enabled=True, clip_norm=1.0, noise_multiplier=1.0,
+                        microbatch_size=8, quant_fraction=0.6,
+                        analysis_interval=2, analysis_reps=1,
+                        grad_mode=mode),
+            optim=OptimConfig(name="sgd", lr=0.5),
+            global_batch=8, steps_per_epoch=2, steps=100, seed=0,
+            epoch_executor=executor)
+
+    params = {}
+    for mode in ("vmap", "ghost"):
+        for executor in ("scan", "loop"):
+            tr = Trainer(run_of(mode, executor), ds, mode="static")
+            tr.train(1)
+            params[(mode, executor)] = tr.params
+
+    # scan and loop are numerically interchangeable within each mode
+    # (ghost's Gram/patch einsums compile with different fusion inside
+    # lax.scan, so equivalence is fp32-tolerance, not bitwise)
+    for mode in ("vmap", "ghost"):
+        assert_tree_close(params[(mode, "scan")], params[(mode, "loop")],
+                          rtol=1e-4, atol=1e-5)
+    # and the two grad modes train identically on a fixed seed
+    assert_tree_close(params[("vmap", "scan")], params[("ghost", "scan")],
+                      rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# validation + introspection
+# --------------------------------------------------------------------------- #
+def test_grad_mode_validation():
+    with pytest.raises(ValueError, match="grad_mode"):
+        validate_grad_mode(DPConfig(grad_mode="bogus"))
+    with pytest.raises(ValueError, match="partial_accum"):
+        validate_grad_mode(DPConfig(grad_mode="ghost", partial_accum=True))
+    with pytest.raises(ValueError, match="fused"):
+        validate_grad_mode(DPConfig(grad_mode="ghost",
+                                    clip_backend="fused"))
+    model = build_model(resnet_cfg(), QuantConfig(fmt="none"))
+    hookless = dataclasses.replace(model, per_example_loss=None)
+    with pytest.raises(ValueError, match="ghost hooks"):
+        validate_grad_mode(DPConfig(grad_mode="ghost"), hookless)
+    with pytest.raises(ValueError, match="per_example_loss"):
+        make_dp_grad_fn(lambda p, e, r: 0.0, DPConfig(grad_mode="ghost"))
+
+
+def test_ghost_mask_structure():
+    """Masks mirror params; hooked set = projections/convs only."""
+    for cfg in (lm_cfg(), resnet_cfg()):
+        model = build_model(cfg, QuantConfig(fmt="none"))
+        params = model.init(jax.random.PRNGKey(0))
+        mask = model.ghost_mask(params)
+        assert (jax.tree_util.tree_structure(mask)
+                == jax.tree_util.tree_structure(params))
+        flat = list(zip(
+            jax.tree_util.tree_leaves_with_path(params),
+            jax.tree_util.tree_leaves(mask)))
+        hooked = sum(bool(m) for _, m in flat)
+        assert 0 < hooked < len(flat)
+        for (path, _), m in flat:
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name in ("scale", "bias", "b"):     # norms + head bias
+                assert not m, f"norm/bias leaf {path} must not be hooked"
+
+
+def test_per_example_state_bytes():
+    model = build_model(lm_cfg(), QuantConfig(fmt="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    est = per_example_state_bytes(params, model.ghost_mask(params), 32)
+    assert est["params_nonhooked"] < est["params_total"]
+    assert est["ghost_bytes"] < est["vmap_bytes"]
+    assert est["vmap_bytes"] == 32 * est["params_total"] * 4

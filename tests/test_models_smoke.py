@@ -6,6 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# ~10 min on a 2-core CPU (one DP train step per registered arch) — runs in
+# the full-suite CI job; the fast tier-1 lane deselects it (-m "not slow").
+pytestmark = pytest.mark.slow
+
 from repro.config import DPConfig, OptimConfig, QuantConfig, RunConfig
 from repro.configs import ASSIGNED_ARCHS, get_smoke_config, list_archs
 from repro.launch.mesh import make_host_mesh

@@ -49,6 +49,7 @@ def oneshot_reference(model, params, prompt, gen):
 # --------------------------------------------------------------------------- #
 # engine vs oneshot token equivalence
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 @pytest.mark.parametrize("fmt,backend", [("none", "ref"),
                                          ("luq_fp4", "ref"),
                                          ("luq_fp4", "pallas")])
@@ -67,6 +68,7 @@ def test_engine_matches_oneshot_single_greedy(fmt, backend):
     assert out[rid].tokens.tolist() == ref
 
 
+@pytest.mark.slow
 def test_mixed_length_requests_each_match_their_oneshot_reference():
     """Multiple requests with different prompt/generation lengths sharing
     two slots must each reproduce their own single-request reference —
