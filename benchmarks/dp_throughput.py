@@ -25,11 +25,38 @@ modes"):
 
     PYTHONPATH=src python benchmarks/dp_throughput.py
     PYTHONPATH=src python benchmarks/dp_throughput.py --smoke   # CI job
+    # sharded-ghost smoke on a fake 8-device mesh, microbatched pass 1:
+    PYTHONPATH=src python benchmarks/dp_throughput.py --smoke \
+        --grad-mode ghost --mesh 8x1 --microbatch 1
 
 Writes ``BENCH_dp_throughput.json`` (cwd) and prints ``dp_throughput,...``
 CSV rows (see benchmarks/common.py).
 """
 from __future__ import annotations
+
+import os
+import sys
+
+# --mesh spawns fake host devices, which must be configured BEFORE the
+# first jax import anywhere in the process (both "--mesh 8x1" and
+# "--mesh=8x1" spellings)
+def _peek_mesh_arg(argv):
+    for i, tok in enumerate(argv):
+        if tok == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if tok.startswith("--mesh="):
+            return tok.split("=", 1)[1]
+    return None
+
+
+_mesh_arg = _peek_mesh_arg(sys.argv)
+if _mesh_arg:
+    _n = 1
+    for _part in _mesh_arg.split("x"):
+        _n *= int(_part)
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count"
+                               f"={_n}")
 
 import argparse
 import dataclasses
@@ -42,11 +69,11 @@ import jax.numpy as jnp
 from common import emit, interleave_timed, median_by, make_run
 from repro.config import ModelConfig
 from repro.dp.ghost import per_example_state_bytes
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_compat_mesh, make_host_mesh
 from repro.launch.steps import build_train_setup
 from repro.models.registry import build_model
 
-MODES = ("vmap", "ghost")
+ALL_MODES = ("vmap", "ghost")
 
 
 def lm_model(smoke: bool) -> ModelConfig:
@@ -85,17 +112,21 @@ def make_batch(cfg: ModelConfig, batch: int, seq_len: int):
 
 
 def bench_point(cfg: ModelConfig, batch: int, seq_len: int, fmt: str,
-                reps: int) -> dict:
+                reps: int, modes=ALL_MODES, mesh_shape=None,
+                ghost_microbatch: int = 0) -> dict:
     """One (model, batch) sweep point: median-rep step time per mode."""
-    mesh = make_host_mesh()
+    mesh = (make_compat_mesh(mesh_shape, ("data", "model")[:len(mesh_shape)]
+                             if len(mesh_shape) == 2 else ("data",))
+            if mesh_shape else make_host_mesh())
     data = make_batch(cfg, batch, seq_len)
     qflags = jnp.ones((cfg.policy_len(),), jnp.float32)
     steps = {}
-    for mode in MODES:
+    for mode in modes:
         run = make_run(cfg, fmt=fmt, dp=True, batch=batch, optimizer="sgd")
         run = dataclasses.replace(
             run, seq_len=seq_len,
-            dp=dataclasses.replace(run.dp, grad_mode=mode))
+            dp=dataclasses.replace(run.dp, grad_mode=mode,
+                                   ghost_microbatch=ghost_microbatch))
         model = build_model(cfg, run.quant)
         setup = build_train_setup(model, run, mesh, batch_size=batch,
                                   seq_len=seq_len)
@@ -122,18 +153,22 @@ def bench_point(cfg: ModelConfig, batch: int, seq_len: int, fmt: str,
 
         return run_once
 
-    results = interleave_timed({m: timed(m) for m in MODES}, reps=reps)
+    results = interleave_timed({m: timed(m) for m in modes}, reps=reps)
     point = {"batch": batch}
-    for mode in MODES:
+    for mode in modes:
         wall = median_by(results[mode], lambda t: t)
         point[mode] = {"step_s_median": wall, "steps_per_sec": 1.0 / wall,
                        "step_s_reps": results[mode]}
-    point["speedup_ghost_over_vmap"] = (point["vmap"]["step_s_median"]
-                                        / point["ghost"]["step_s_median"])
+    if "vmap" in point and "ghost" in point:
+        point["speedup_ghost_over_vmap"] = (point["vmap"]["step_s_median"]
+                                            / point["ghost"]["step_s_median"])
     # analytic per-example gradient state (the batch-scaling memory term),
-    # counted from the params already initialized for the timed steps
+    # counted from the params already initialized for the timed steps;
+    # with the model's GhostAux hooks (dense_lm) ghost state is exactly 0
+    aux = (last_model.ghost_aux(qflags)
+           if last_model.ghost_aux is not None else None)
     point["per_example_state_bytes"] = per_example_state_bytes(
-        last_params, last_model.ghost_mask(last_params), batch)
+        last_params, last_model.ghost_mask(last_params), batch, aux=aux)
     return point
 
 
@@ -144,8 +179,23 @@ def main(argv=None):
     ap.add_argument("--batches", type=int, nargs="*", default=None)
     ap.add_argument("--reps", type=int, default=None)
     ap.add_argument("--fmt", default="luq_fp4")
+    ap.add_argument("--grad-mode", default="both",
+                    choices=["both", "vmap", "ghost"],
+                    help="restrict the timed modes (CI smokes the ghost "
+                         "path alone on the fake-device mesh)")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="ghost_microbatch pass-1 chunk size for the "
+                         "ghost rows (0 = whole batch)")
+    ap.add_argument("--mesh", default=None,
+                    help="AxB fake-device mesh shape, e.g. 8x1 — spawns "
+                         "XLA host devices and exercises the sharded "
+                         "ghost driver (must be first-parsed: sets "
+                         "XLA_FLAGS before jax import)")
     ap.add_argument("--out", default="BENCH_dp_throughput.json")
     args = ap.parse_args(argv)
+    modes = ALL_MODES if args.grad_mode == "both" else (args.grad_mode,)
+    mesh_shape = (tuple(int(p) for p in args.mesh.split("x"))
+                  if args.mesh else None)
 
     # odd rep counts keep median_by an actual median (with 2 reps the
     # upper-middle element is the worst run, not a median)
@@ -172,24 +222,28 @@ def main(argv=None):
         "config": {"fmt": args.fmt,
                    "batches": {k: list(v)
                                for k, v in batches_by_model.items()},
-                   "reps": reps, "seq_len": seq_len, "smoke": args.smoke},
+                   "reps": reps, "seq_len": seq_len, "smoke": args.smoke,
+                   "modes": list(modes), "mesh": args.mesh,
+                   "ghost_microbatch": args.microbatch},
         "models": {},
     }
     for name, cfg in models.items():
         sweep = []
         for batch in batches_by_model[name]:
-            point = bench_point(cfg, batch, seq_len, args.fmt, reps)
+            point = bench_point(cfg, batch, seq_len, args.fmt, reps,
+                                modes=modes, mesh_shape=mesh_shape,
+                                ghost_microbatch=args.microbatch)
             sweep.append(point)
-            emit("dp_throughput", model=name, batch=batch,
-                 vmap_sps=round(point["vmap"]["steps_per_sec"], 3),
-                 ghost_sps=round(point["ghost"]["steps_per_sec"], 3),
-                 speedup=round(point["speedup_ghost_over_vmap"], 3),
-                 vmap_state_mb=round(
-                     point["per_example_state_bytes"]["vmap_bytes"] / 2**20,
-                     1),
-                 ghost_state_mb=round(
-                     point["per_example_state_bytes"]["ghost_bytes"] / 2**20,
-                     1))
+            row = {"model": name, "batch": batch}
+            for m in modes:
+                row[f"{m}_sps"] = round(point[m]["steps_per_sec"], 3)
+            if "speedup_ghost_over_vmap" in point:
+                row["speedup"] = round(point["speedup_ghost_over_vmap"], 3)
+            row["vmap_state_mb"] = round(
+                point["per_example_state_bytes"]["vmap_bytes"] / 2**20, 1)
+            row["ghost_state_mb"] = round(
+                point["per_example_state_bytes"]["ghost_bytes"] / 2**20, 1)
+            emit("dp_throughput", **row)
         payload["models"][name] = {
             "model_config": {"family": cfg.family,
                              "d_model": cfg.d_model,
@@ -201,7 +255,8 @@ def main(argv=None):
         }
 
     lm_sweep = payload["models"]["transformer"]["sweep"]
-    big = [p for p in lm_sweep if p["batch"] >= 32]
+    big = [p for p in lm_sweep
+           if p["batch"] >= 32 and "speedup_ghost_over_vmap" in p]
     if big:
         payload["transformer_speedup_at_batch_ge_32"] = {
             str(p["batch"]): p["speedup_ghost_over_vmap"] for p in big}

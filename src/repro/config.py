@@ -153,8 +153,19 @@ class DPConfig:
     #           scale-reweighted batched backward.  Requires a model family
     #           with ghost hooks (dense_lm, resnet, densenet); incompatible
     #           with partial_accum and clip_backend="fused"; microbatch_size
-    #           is ignored (the whole batch is one fused pass).
+    #           is ignored (ghost_microbatch below is its memory knob).
     grad_mode: str = "vmap"
+    # Ghost pass-1 chunk size (0 = whole batch in one vmapped pass): chunks
+    # the norm pass with a lax.scan so pass-1 live state is one chunk of
+    # activations; pass 2 stays one fused batched backward.  Numerically
+    # identical (per-example quantization is chunk-invariant).
+    ghost_microbatch: int = 0
+    # Data-parallel ghost formulation (dp/ghost.sharded_ghost_clipped_grad_sum):
+    # "auto" = shard_map over the mesh's data axes when they have degree > 1
+    # and params are not model-sharded, else the single-pass GSPMD driver;
+    # "on" / "off" force the choice.  Per-shard norm taps + ONE psum of the
+    # clipped grad sums.
+    ghost_sharded: str = "auto"
     # DPQuant analysis (paper Table 3 defaults)
     analysis_interval: int = 2       # epochs between COMPUTELOSSIMPACT runs
     analysis_reps: int = 2           # R

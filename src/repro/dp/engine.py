@@ -30,6 +30,12 @@ def validate_grad_mode(dp: DPConfig, model=None) -> None:
                          f"got {dp.grad_mode!r}")
     if dp.grad_mode != "ghost":
         return
+    if dp.ghost_microbatch < 0:
+        raise ValueError(f"dp.ghost_microbatch must be >= 0, "
+                         f"got {dp.ghost_microbatch}")
+    if dp.ghost_sharded not in ("auto", "on", "off"):
+        raise ValueError(f"dp.ghost_sharded must be 'auto', 'on' or 'off', "
+                         f"got {dp.ghost_sharded!r}")
     if dp.partial_accum:
         raise ValueError("grad_mode='ghost' computes the clipped grad sum "
                          "in one reweighted backward and keeps no per-shard "
@@ -50,13 +56,16 @@ def validate_grad_mode(dp: DPConfig, model=None) -> None:
 
 def make_dp_grad_fn(loss_fn: Callable, dp: DPConfig, *,
                     per_example_loss: Callable = None,
-                    ghost_mask: Callable = None) -> Callable:
+                    ghost_mask: Callable = None,
+                    ghost_aux=None) -> Callable:
     """Returns ``dp_grad(params, batch, rng) -> (noisy_mean_grad, metrics)``.
 
     ``loss_fn(params, example, rng)``: scalar loss of a single example.
     With ``dp.grad_mode="ghost"``, ``per_example_loss(params, batch, rng)
     -> (B,)`` and ``ghost_mask(params) -> bool pytree`` must also be given
-    (the registry ``Model`` provides both for supported families).
+    (the registry ``Model`` provides both for supported families);
+    ``ghost_aux`` is an optional pre-bound ``repro.dp.ghost.GhostAux``
+    (full embedding/head hook coverage).
     """
     validate_grad_mode(dp)
     if dp.grad_mode == "ghost" and (per_example_loss is None
@@ -71,7 +80,8 @@ def make_dp_grad_fn(loss_fn: Callable, dp: DPConfig, *,
             grad_sum, metrics = ghost_clipped_grad_sum(
                 loss_fn, per_example_loss, params, batch,
                 clip_norm=dp.clip_norm, rng=clip_rng,
-                hooked_mask=ghost_mask(params))
+                hooked_mask=ghost_mask(params), aux=ghost_aux,
+                ghost_microbatch=dp.ghost_microbatch)
         else:
             grad_sum, metrics = per_example_clipped_grad_sum(
                 loss_fn, params, batch,

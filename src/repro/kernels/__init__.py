@@ -1,19 +1,22 @@
 """Pallas TPU kernels + jit'd public wrappers.
 
-The wrappers (``luq_quantize``, ``luq_matmul``, ``clip_and_sum``) own
-padding / RNG / interpret-mode plumbing and are what the quantizer-backend
-dispatcher (``repro.quant.backend``) registers under ``backend="pallas"``.
-The raw kernels (``luq_quant_2d``, ``quant_matmul``, ``per_sample_clip``)
-require pre-padded tile-multiple shapes; ``ref`` holds their pure-jnp
-oracles.
+The wrappers (``luq_quantize``, ``luq_matmul``, ``clip_and_sum``,
+``ghost_norm_sq``) own padding / RNG / interpret-mode plumbing and are
+what the quantizer-backend dispatcher (``repro.quant.backend``) registers
+under ``backend="pallas"``.  The raw kernels (``luq_quant_2d``,
+``quant_matmul``, ``per_sample_clip``, ``ghost_norm_gram``) require
+pre-padded tile-multiple shapes; ``ref`` holds their pure-jnp oracles.
 """
-from repro.kernels.ops import luq_quantize, luq_matmul, clip_and_sum
+from repro.kernels.ops import (luq_quantize, luq_matmul, clip_and_sum,
+                               ghost_norm_sq)
 from repro.kernels.luq_quant import luq_quant_2d
 from repro.kernels.quant_matmul import quant_matmul
 from repro.kernels.per_sample_clip import per_sample_clip
+from repro.kernels.ghost_norm import ghost_norm_gram
 from repro.kernels import ref
 
 __all__ = [
-    "luq_quantize", "luq_matmul", "clip_and_sum",
-    "luq_quant_2d", "quant_matmul", "per_sample_clip", "ref",
+    "luq_quantize", "luq_matmul", "clip_and_sum", "ghost_norm_sq",
+    "luq_quant_2d", "quant_matmul", "per_sample_clip", "ghost_norm_gram",
+    "ref",
 ]

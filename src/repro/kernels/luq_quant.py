@@ -22,10 +22,10 @@ from jax.experimental import pallas as pl
 from repro.quant.formats import LUQ_EXP_LEVELS
 
 
-def _luq_kernel(x_ref, u_ref, alpha_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)
-    u = u_ref[...]
-    alpha = alpha_ref[0, 0]
+def luq_stochastic_round(x, u, alpha):
+    """The LUQ-FP4 elementwise math (f32 in/out), shared by the quantize
+    and fused ghost-norm kernels so their bits cannot drift apart.
+    Mirrors ``repro.quant.formats.luq_fp4`` exactly."""
     safe_alpha = jnp.where(alpha > 0, alpha, 1.0)
     sign = jnp.sign(x)
     y = jnp.abs(x) / safe_alpha
@@ -39,8 +39,13 @@ def _luq_kernel(x_ref, u_ref, alpha_ref, o_ref):
     p_up = (y - low) / jnp.maximum(high - low, 1e-30)
     rounded = jnp.where(u < p_up, high, low)
     q = jnp.where(y < min_level, under, rounded)
-    out = sign * q * safe_alpha
-    o_ref[...] = jnp.where(alpha > 0, out, 0.0).astype(o_ref.dtype)
+    return jnp.where(alpha > 0, sign * q * safe_alpha, 0.0)
+
+
+def _luq_kernel(x_ref, u_ref, alpha_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    out = luq_stochastic_round(x, u_ref[...], alpha_ref[0, 0])
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
 def luq_quant_2d(x: jax.Array, u: jax.Array, alpha: jax.Array,

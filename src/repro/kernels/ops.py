@@ -12,7 +12,9 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.ghost_norm import ghost_norm_gram
 from repro.kernels.luq_quant import luq_quant_2d
 from repro.kernels.per_sample_clip import per_sample_clip
 from repro.kernels.quant_matmul import quant_matmul
@@ -34,6 +36,31 @@ def _pad_to(x, mult0, mult1):
     return x, (m, n)
 
 
+def _luq_draw_shape(n: int, block=(256, 256)):
+    """The padded 2-d view ``luq_quantize`` draws its uniforms over, for a
+    tensor of ``n`` elements.  Threefry pairs the first and second halves
+    of the counter array, so ``uniform(key, N)[:n] != uniform(key, (n,))``
+    — the draw for element i depends on the TOTAL element count, making
+    this shape part of the bit-parity contract.  Single source of truth:
+    both ``luq_quantize`` and ``luq_uniform`` derive their draws from it,
+    so they cannot drift apart."""
+    cols = 256
+    rows = -(-n // cols)
+    rows += (-rows) % block[0]
+    cols += (-cols) % block[1]
+    return rows, cols
+
+
+def luq_uniform(key, shape, block=(256, 256)) -> jax.Array:
+    """The uniform draws ``luq_quantize`` consumes for a tensor of
+    ``shape``, reshaped back to ``shape`` — what a fused kernel
+    (``ghost_norm_sq``) uses to be bit-identical to the quantize kernel
+    for the same ``(tensor, key)``."""
+    n = int(np.prod(shape))
+    u = jax.random.uniform(key, _luq_draw_shape(n, block), jnp.float32)
+    return u.reshape(-1)[:n].reshape(shape)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def luq_quantize(x: jax.Array, key: jax.Array, block=(256, 256),
                  interpret=None) -> jax.Array:
@@ -48,6 +75,7 @@ def luq_quantize(x: jax.Array, key: jax.Array, block=(256, 256),
     flat = jnp.pad(flat, (0, rows * cols - n))
     x2 = flat.reshape(rows, cols)
     x2, _ = _pad_to(x2, block[0], block[1])
+    assert x2.shape == _luq_draw_shape(n, block), (x2.shape, n)
     u = jax.random.uniform(key, x2.shape, jnp.float32)
     alpha = jnp.max(jnp.abs(x.astype(jnp.float32)))
     q = luq_quant_2d(x2, u, alpha, block=block, interpret=interpret)
@@ -71,6 +99,56 @@ def luq_matmul(a: jax.Array, b: jax.Array, key: jax.Array,
     out = quant_matmul(ap, bp, ua, ub, alpha_a, alpha_b, block=block,
                        interpret=interpret)
     return out[:m, :n]
+
+
+# Largest row count the fused ghost-norm kernel accepts: its two (T, T)
+# f32 Gram scratches must fit VMEM alongside the operand blocks
+# (2 * 512^2 * 4B = 2 MiB scratch + ~2 MiB blocks, well under the
+# ~16 MiB/core budget).  Above the cap the wrapper falls back to the
+# unfused quantize-then-Gram composition, which XLA handles at any size.
+GHOST_NORM_MAX_T = 512
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ghost_norm_sq(x: jax.Array, g: jax.Array, key_x: jax.Array,
+                  key_g: jax.Array, block_d: int = 256,
+                  interpret=None) -> jax.Array:
+    """Fused LUQ-quantize + Gram + tap-reduce: ``||Q(x)^T Q(g)||_F^2``.
+
+    ``x``: (T, Din) wgrad-GEMM input rows; ``g``: (T, Dout) cotangent rows
+    (the matrix views of the ghost einsum hook — contiguous reshapes of
+    the original operands, so ``luq_uniform`` over the matrix view is
+    elementwise identical to the draws ``luq_quantize`` makes for the
+    original tensors with the same keys — the bit-parity contract with
+    the pallas-backend vmap path).  Per-tensor alphas and uniform bits
+    are computed on the unpadded operands; rows are zero-padded to a
+    sublane multiple and both operands to one shared lane-aligned column
+    count (zeros quantize to zero and contribute nothing to either Gram).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    t = x.shape[0]
+    assert g.shape[0] == t, (x.shape, g.shape)
+    if t > GHOST_NORM_MAX_T:
+        # Gram scratch would not fit VMEM on a real TPU — unfused
+        # composition, same keys/draws -> bit-identical result
+        xq = luq_quantize(x, key_x).astype(jnp.float32)
+        gq = luq_quantize(g, key_g).astype(jnp.float32)
+        return jnp.vdot(xq @ xq.T, gq @ gq.T)
+    ux = luq_uniform(key_x, x.shape)
+    ug = luq_uniform(key_g, g.shape)
+    alpha_x = jnp.max(jnp.abs(x.astype(jnp.float32))).reshape(1, 1)
+    alpha_g = jnp.max(jnp.abs(g.astype(jnp.float32))).reshape(1, 1)
+    d = max(x.shape[1], g.shape[1])
+    d = d + ((-d) % block_d)
+    pt = (-t) % 8
+
+    def pad(a):
+        return jnp.pad(a.astype(jnp.float32),
+                       ((0, pt), (0, d - a.shape[1])))
+
+    out = ghost_norm_gram(pad(x), pad(ux), pad(g), pad(ug), alpha_x,
+                          alpha_g, block_d=block_d, interpret=interpret)
+    return out[0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("clip_norm", "block_d",

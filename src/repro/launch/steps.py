@@ -19,7 +19,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config import RunConfig
 from repro.dp.clip import per_example_clipped_grad_sum
 from repro.dp.engine import validate_grad_mode
-from repro.dp.ghost import ghost_clipped_grad_sum
+from repro.dp.ghost import (ghost_clipped_grad_sum,
+                            sharded_ghost_clipped_grad_sum)
 from repro.dp.noise import add_gaussian_noise
 from repro.models.registry import Model
 from repro.optim import make_optimizer, apply_updates
@@ -131,6 +132,30 @@ def build_train_setup(model: Model, run: RunConfig, mesh: Mesh,
             return jax.lax.with_sharding_constraint(x, sh)
         return jax.tree_util.tree_map(one, paxes, tree, is_leaf=_axes_leaf)
 
+    # ---- ghost-mode execution strategy (docs/ARCHITECTURE.md) ----
+    # sharded: shard_map over the data axes (per-shard norm taps + one
+    # psum) when the mesh actually data-parallelizes and params are not
+    # model-sharded; otherwise the GSPMD driver with a sharding-constrained
+    # pass-2 batch.  ghost_microbatch chunks pass 1 either way.
+    model_degree = _sizes.get("model", 1)
+    gs = run.dp.ghost_sharded
+    ghost_is_on = run.dp.enabled and run.dp.grad_mode == "ghost"
+    if ghost_is_on and gs == "on" and model_degree > 1:
+        raise ValueError("dp.ghost_sharded='on' requires params replicated "
+                         "over the data axes (model axis degree 1); use "
+                         "'auto'/'off' on model-parallel meshes")
+    if gs == "on":
+        ghost_use_sharded = ghost_is_on   # divisibility checked in-driver
+    else:
+        ghost_use_sharded = (gs == "auto" and ghost_is_on and dp_shards > 1
+                             and model_degree == 1
+                             and B % dp_shards == 0)
+    ghost_mb_local = run.dp.ghost_microbatch
+
+    def ghost_batch_constrain(b):
+        return jax.tree_util.tree_map(jax.lax.with_sharding_constraint,
+                                      b, batch_sh)
+
     def train_step(params, opt_state, batch, seed, qflags, lr):
         with partitioning_context(resolver):
             rng = jax.random.PRNGKey(seed)
@@ -144,11 +169,24 @@ def build_train_setup(model: Model, run: RunConfig, mesh: Mesh,
                 def pel(p, b, r):
                     return model.per_example_loss(p, b, r, qflags)
 
-                grad_sum, metrics = ghost_clipped_grad_sum(
-                    loss_one, pel, params, batch,
-                    clip_norm=run.dp.clip_norm, rng=clip_rng,
-                    hooked_mask=model.ghost_mask(params),
-                    accum_dtype=accum_dtype)
+                aux = (model.ghost_aux(qflags)
+                       if model.ghost_aux is not None else None)
+                if ghost_use_sharded:
+                    grad_sum, metrics = sharded_ghost_clipped_grad_sum(
+                        loss_one, pel, params, batch,
+                        clip_norm=run.dp.clip_norm, rng=clip_rng,
+                        hooked_mask=model.ghost_mask(params),
+                        mesh=mesh, data_axes=("pod", "data"),
+                        accum_dtype=accum_dtype, aux=aux,
+                        ghost_microbatch=ghost_mb_local)
+                else:
+                    grad_sum, metrics = ghost_clipped_grad_sum(
+                        loss_one, pel, params, batch,
+                        clip_norm=run.dp.clip_norm, rng=clip_rng,
+                        hooked_mask=model.ghost_mask(params),
+                        accum_dtype=accum_dtype, aux=aux,
+                        ghost_microbatch=run.dp.ghost_microbatch,
+                        constrain=ghost_batch_constrain)
                 grads = add_gaussian_noise(
                     grad_sum, clip_norm=run.dp.clip_norm,
                     noise_multiplier=run.dp.noise_multiplier,

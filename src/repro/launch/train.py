@@ -49,6 +49,16 @@ def main(argv=None):
                     help="per-example gradient engine: vmap(grad) "
                          "materialization or two-pass ghost-norm clipping "
                          "(docs/ARCHITECTURE.md 'DP gradient modes')")
+    ap.add_argument("--ghost-microbatch", type=int, default=0,
+                    help="ghost pass-1 chunk size (0 = whole batch): scans "
+                         "the norm pass in chunks so activations alone "
+                         "bound ghost memory")
+    ap.add_argument("--ghost-sharded", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="data-parallel ghost formulation: shard_map with "
+                         "per-shard norm taps + one psum of the clipped "
+                         "grad sums (auto = when the mesh data axes have "
+                         "degree > 1)")
     ap.add_argument("--quant-fraction", type=float, default=0.9)
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--steps-per-epoch", type=int, default=10)
@@ -84,7 +94,9 @@ def main(argv=None):
                     microbatch_size=args.microbatch,
                     quant_fraction=args.quant_fraction,
                     clip_backend=args.clip_backend,
-                    grad_mode=args.grad_mode),
+                    grad_mode=args.grad_mode,
+                    ghost_microbatch=args.ghost_microbatch,
+                    ghost_sharded=args.ghost_sharded),
         optim=OptimConfig(name=args.optimizer, lr=args.lr),
         global_batch=args.batch, seq_len=args.seq_len,
         steps_per_epoch=args.steps_per_epoch,

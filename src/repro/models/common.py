@@ -39,11 +39,24 @@ def embed_init(key, shape, dtype=jnp.float32):
 # --------------------------------------------------------------------------- #
 # norms
 # --------------------------------------------------------------------------- #
-def rmsnorm(x, scale, eps=1e-6):
+def _rmsnorm_raw(x, scale, eps):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
     out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
     return out.astype(x.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    """RMSNorm; under a ghost norm pass with ``norm_scales`` enabled the
+    scale leaf's per-example squared grad norm is tapped (repro.dp.ghost),
+    output bits unchanged."""
+    from repro.dp import ghost
+    ctx = ghost.current()
+    if (ctx is not None and getattr(ctx, "mode", None) == "norm"
+            and getattr(ctx, "norm_scales", False)):
+        return ghost.make_ghost_scale_norm(_rmsnorm_raw, eps)(
+            x, scale, ctx.tap)
+    return _rmsnorm_raw(x, scale, eps)
 
 
 def layernorm(x, scale, bias, eps=1e-6):
@@ -153,7 +166,7 @@ def repeat_kv(x, n_rep: int):
 # losses
 # --------------------------------------------------------------------------- #
 def chunked_lm_loss(h, targets, embed, *, real_vocab: int, ce_chunk: int,
-                    mask=None, per_example: bool = False):
+                    mask=None, per_example: bool = False, logits_tap=None):
     """Mean next-token cross-entropy without materializing (B, S, V).
 
     h: (B, S, d) hidden states aligned with ``targets`` (B, S) int32.
@@ -162,19 +175,29 @@ def chunked_lm_loss(h, targets, embed, *, real_vocab: int, ce_chunk: int,
     ``per_example=True`` returns the (B,) vector of per-example mean NLLs
     (each equal to the scalar loss of that example alone — the ghost
     grad-engine's reweighting target) instead of the batch mean.
+    ``logits_tap``: ghost pass-1 hook (repro.dp.ghost.GhostAux) — a
+    (B, S, V_pad) zero array added onto the raw logits; its cotangent is
+    the logits cotangent the head wgrad consumes.  Forces a SINGLE
+    sequence chunk (the single-chunk LM-head hook) and switches the
+    return to ``(loss, hc)`` with ``hc`` the f32 hidden rows that entered
+    the logits GEMM.
     """
     b, s, dm = h.shape
     vpad = embed.shape[0]
-    cc = min(ce_chunk, s)
+    cc = s if logits_tap is not None else min(ce_chunk, s)
     n_chunks = (s + cc - 1) // cc
     zero = jnp.zeros((b,), jnp.float32) if per_example else jnp.float32(0.0)
     total, denom = zero, zero
     reduce_axes = (1,) if per_example else None
     vocab_ids = jnp.arange(vpad)
+    hc_out = None
     for i in range(n_chunks):
         s0, s1 = i * cc, min((i + 1) * cc, s)
         hc = h[:, s0:s1].astype(jnp.float32)
         logits = jnp.einsum("bsd,vd->bsv", hc, embed.astype(jnp.float32))
+        if logits_tap is not None:
+            logits = logits + logits_tap
+            hc_out = hc
         logits = jnp.where(vocab_ids[None, None, :] < real_vocab,
                            logits, -1e30)
         tc = targets[:, s0:s1]
@@ -188,7 +211,10 @@ def chunked_lm_loss(h, targets, embed, *, real_vocab: int, ce_chunk: int,
         else:
             total += nll.sum(axis=reduce_axes)
             denom += jnp.float32(nll.size / b if per_example else nll.size)
-    return total / jnp.maximum(denom, 1.0)
+    loss = total / jnp.maximum(denom, 1.0)
+    if logits_tap is not None:
+        return loss, hc_out
+    return loss
 
 
 def softmax_xent(logits, labels, per_example: bool = False):

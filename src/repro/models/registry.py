@@ -40,6 +40,11 @@ class Model:
     # norm-only fallback).
     per_example_loss: Optional[Callable] = None
     ghost_mask: Optional[Callable] = None
+    # ghost_aux(qflags) -> repro.dp.ghost.GhostAux: the model's extra
+    # pass-1 hooks (embedding gather Gram, single-chunk LM head, norm
+    # scales) — with them the family runs ghost pass 1 with ZERO
+    # vmapped-fallback parameters.  None = op-level hooks + fallback only.
+    ghost_aux: Optional[Callable] = None
 
     @property
     def n_policy_layers(self) -> int:

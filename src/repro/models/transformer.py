@@ -171,11 +171,18 @@ def run_block_stack(x, blocks, qflags, positions, cfg: ModelConfig,
 
 
 def forward_hidden(params, tokens, qflags, cfg: ModelConfig,
-                   quant: QuantConfig, inputs_embeds: Optional[jax.Array] = None):
+                   quant: QuantConfig, inputs_embeds: Optional[jax.Array] = None,
+                   embed_tap: Optional[jax.Array] = None):
     cd = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
     if cfg.family == "dense_lm":
         x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)  # gemma-style scaling
+    if embed_tap is not None:
+        # ghost pass-1 gather hook (repro.dp.ghost.GhostAux): the tap's
+        # cotangent is the embedding-output cotangent the scatter-grad
+        # would consume; injected post-scaling so the embed grad is
+        # sqrt(d_model) * scatter(tokens, cotangent)
+        x = x + embed_tap
     if inputs_embeds is not None:
         nv = inputs_embeds.shape[1]
         x = jnp.concatenate([inputs_embeds.astype(cd), x[:, nv:]], axis=1)
@@ -186,26 +193,36 @@ def forward_hidden(params, tokens, qflags, cfg: ModelConfig,
 
 
 def lm_loss(params, batch, rng, qflags, cfg: ModelConfig, quant: QuantConfig,
-            loss_mask_prefix: int = 0, per_example: bool = False):
+            loss_mask_prefix: int = 0, per_example: bool = False,
+            ghost_taps=None):
     del rng
     tokens = batch["tokens"]
+    taps = ghost_taps or {}
     h = forward_hidden(params, tokens, qflags, cfg, quant,
-                       inputs_embeds=batch.get("vision_embeds"))
+                       inputs_embeds=batch.get("vision_embeds"),
+                       embed_tap=taps.get("embed_out"))
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
     mask = None
     if loss_mask_prefix:
         mask = (jnp.arange(tokens.shape[1] - 1)[None, :]
                 >= loss_mask_prefix).astype(jnp.float32) \
             * jnp.ones((tokens.shape[0], 1), jnp.float32)
-    return cm.chunked_lm_loss(h[:, :-1], tokens[:, 1:], head,
-                              real_vocab=cfg.vocab_size,
-                              ce_chunk=cfg.ce_chunk, mask=mask,
-                              per_example=per_example)
+    out = cm.chunked_lm_loss(h[:, :-1], tokens[:, 1:], head,
+                             real_vocab=cfg.vocab_size,
+                             ce_chunk=cfg.ce_chunk, mask=mask,
+                             per_example=per_example,
+                             logits_tap=taps.get("logits"))
+    if ghost_taps is not None:
+        loss, hc = out
+        return loss, {"hidden": hc}
+    return out
 
 
 # Ghost-clipping hooks (repro.dp.ghost): every block projection runs
 # through cm.qproj -> qeinsum and therefore carries a ghost norm hook;
-# norms, embeddings and (untied) lm_head use the vmapped fallback.
+# norm scales are tapped by the ghost rmsnorm hook and the embedding /
+# LM head by the GhostAux hooks below, so dense_lm pass 1 has NO
+# vmapped-fallback leaves (asserted in tests/test_dp_ghost.py).
 _GHOST_HOOKED_LEAVES = frozenset(
     ("wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wo_mlp"))
 
@@ -216,6 +233,69 @@ def ghost_mask(params):
                 if isinstance(p, jax.tree_util.DictKey)]
         return bool(keys) and keys[-1] in _GHOST_HOOKED_LEAVES
     return jax.tree_util.tree_map_with_path(mark, params)
+
+
+def make_ghost_aux(qflags, cfg: ModelConfig, quant: QuantConfig):
+    """Dense-LM :class:`repro.dp.ghost.GhostAux`: gather + LM-head hooks.
+
+    Per example, the embedding leaf's grad is the sum of a gather-scatter
+    term and (tied embeddings) a head term landing on the SAME leaf:
+
+        d_gather = s * A^T C      A = onehot(tokens) (T, V), C = gather-out
+                                  cotangent (T, d), s = sqrt(d_model)
+        d_head   = G^T H          G = logits cotangent (S-1, V_pad),
+                                  H = f32 hidden rows (S-1, d)
+
+    so ``||d_gather + d_head||^2`` needs the token-equality-masked Gram of
+    the lookup cotangents, the head's mixed ghost norm, and — because
+    both are one stacked matrix product ``[A; G]^T [sC; H]`` — the cross
+    term ``2 <d_gather, d_head> = 2 sum_{s,t} G[s, tok_t] <sC_t, H_s>``.
+    All three are Gram-sized (O(T^2 d + S^2 V)); the (V, d) per-example
+    grad is never formed.  Untied heads drop the cross term (different
+    leaves) and split the two norms across embed / lm_head.
+    """
+    from repro.dp.ghost import GhostAux, _matpair_sq_norm
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    emb_scale = math.sqrt(cfg.d_model) if cfg.family == "dense_lm" else 1.0
+
+    def make_taps(ex):
+        t = ex["tokens"].shape[-1]
+        return {
+            "embed_out": jnp.zeros((1, t, cfg.d_model), cd),
+            "logits": jnp.zeros((1, t - 1, cfg.padded_vocab), jnp.float32),
+        }
+
+    def tapped_loss(params, ex, rng, taps):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        return lm_loss(params, b1, rng, qflags, cfg=cfg, quant=quant,
+                       ghost_taps=taps)
+
+    def combine(cots, fwd, ex):
+        c = cots["embed_out"][0].astype(jnp.float32) * emb_scale  # (T, d)
+        g = cots["logits"][0].astype(jnp.float32)                 # (S-1, Vp)
+        h = fwd["hidden"][0].astype(jnp.float32)                  # (S-1, d)
+        tok = ex["tokens"]
+        eq = (tok[:, None] == tok[None, :]).astype(jnp.float32)
+        sq_gather = jnp.vdot(eq, c @ c.T)
+        sq_head = _matpair_sq_norm(h, g)
+        if not cfg.tie_embeddings:
+            return sq_gather + sq_head
+        cross = jnp.vdot(jnp.take(g, tok, axis=1), h @ c.T)
+        return sq_gather + sq_head + 2.0 * cross
+
+    def covers(params):
+        # embed + (untied) lm_head via the taps above; *_norm scale
+        # leaves via the ghost rmsnorm hook (hook_norm_scales)
+        def mark(path, _):
+            keys = [p.key for p in path
+                    if isinstance(p, jax.tree_util.DictKey)]
+            name = keys[-1] if keys else ""
+            return name in ("embed", "lm_head") or name.endswith("norm")
+        return jax.tree_util.tree_map_with_path(mark, params)
+
+    return GhostAux(make_taps=make_taps, tapped_loss=tapped_loss,
+                    combine=combine, covers=covers, hook_norm_scales=True)
 
 
 # --------------------------------------------------------------------------- #
@@ -459,4 +539,5 @@ def build_dense_lm(cfg: ModelConfig, quant: QuantConfig) -> Model:
         per_example_loss=functools.partial(lm_loss, cfg=cfg, quant=quant,
                                            per_example=True),
         ghost_mask=ghost_mask,
+        ghost_aux=functools.partial(make_ghost_aux, cfg=cfg, quant=quant),
     )

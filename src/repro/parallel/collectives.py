@@ -30,6 +30,25 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
 
+def compat_shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across JAX versions, replication checking disabled.
+
+    The replication-check kwarg was renamed (``check_rep`` ->
+    ``check_vma``) across releases and the bodies we wrap (vmapped
+    custom-VJP hooks, scans, psums) are outside what older checkers can
+    prove; callers guarantee replicated outputs themselves (psum /
+    tiled all_gather).  Used by the sharded ghost driver
+    (``repro.dp.ghost.sharded_ghost_clipped_grad_sum``).
+    """
+    for kw in ("check_rep", "check_vma"):
+        try:
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **{kw: False})
+        except TypeError:
+            continue
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def _quantize_int8(x, key):
     scale = jnp.max(jnp.abs(x)) / 127.0
     scale = jnp.where(scale > 0, scale, 1.0)

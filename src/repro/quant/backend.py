@@ -18,6 +18,12 @@ Three ops are dispatched:
 ``"clip_sum"``  ``cs(grads, clip_norm) -> (clipped_sum, norms)`` — fused DP
                 per-example clip + batch sum over (B, D) gradient rows;
                 format-agnostic (registered under fmt ``"*"``).
+``"ghost_norm"`` ``gn(xmat, gmat, key_x, key_g) -> f32 scalar`` — the ghost
+                clipping tap ``||Q(x)^T Q(g)||_F^2`` from the (T, Din) /
+                (T, Dout) wgrad-GEMM matrix views; the pallas impl fuses
+                quantize + Gram + tap-reduce into one VMEM pass
+                (``repro.kernels.ghost_norm``), the ref impl composes the
+                quantizer with the mixed-ghost-norm reduction.
 
 Backend selection: the ``REPRO_QUANT_BACKEND`` environment variable
 overrides everything (so CI can force the pallas leg without touching
@@ -39,7 +45,7 @@ from repro.quant import formats
 ENV_VAR = "REPRO_QUANT_BACKEND"
 DEFAULT_BACKEND = "ref"
 BACKENDS = ("ref", "pallas")
-OPS = ("quantize", "matmul", "clip_sum")
+OPS = ("quantize", "matmul", "clip_sum", "ghost_norm")
 
 # fmt sentinel for format-agnostic ops (clip_sum)
 ANY_FORMAT = "*"
@@ -155,9 +161,22 @@ def _ref_clip_sum(grads, clip_norm):
     return per_sample_clip_ref(grads, clip_norm)
 
 
+def _ref_ghost_norm(fmt: str) -> Callable:
+    q = formats.make_quantizer(fmt)
+
+    def gn(xmat, gmat, key_x, key_g):
+        # lazy: dp.ghost imports this module only inside functions, so the
+        # package stays import-order independent
+        from repro.dp.ghost import _matpair_sq_norm
+        return _matpair_sq_norm(q(xmat, key_x), q(gmat, key_g))
+
+    return gn
+
+
 for _fmt in formats._FORMATS:
     register("quantize", _fmt, "ref", formats.make_quantizer(_fmt))
     register("matmul", _fmt, "ref", _ref_matmul(_fmt))
+    register("ghost_norm", _fmt, "ref", _ref_ghost_norm(_fmt))
 register("clip_sum", ANY_FORMAT, "ref", _ref_clip_sum)
 
 
@@ -182,6 +201,12 @@ def _pallas_clip_sum(grads, clip_norm):
     return clip_and_sum(grads, float(clip_norm))
 
 
+def _pallas_ghost_norm(xmat, gmat, key_x, key_g):
+    from repro.kernels.ops import ghost_norm_sq
+    return ghost_norm_sq(xmat, gmat, key_x, key_g)
+
+
 register("quantize", "luq_fp4", "pallas", _pallas_quantize)
 register("matmul", "luq_fp4", "pallas", _pallas_matmul)
 register("clip_sum", ANY_FORMAT, "pallas", _pallas_clip_sum)
+register("ghost_norm", "luq_fp4", "pallas", _pallas_ghost_norm)

@@ -135,12 +135,14 @@ def qeinsum(spec: str, x: jax.Array, w: jax.Array, *, seed: jax.Array,
 @functools.lru_cache(maxsize=None)
 def _make_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
                 strides: tuple, padding: str, dnums_key: tuple, backend: str,
-                per_example: bool = False):
+                per_example: bool = False, rhs_dilation: tuple = (1, 1),
+                feature_groups: int = 1):
     dn = jax.lax.ConvDimensionNumbers(*dnums_key)
 
     def conv(x, w):
-        return jax.lax.conv_general_dilated(x, w, strides, padding,
-                                            dimension_numbers=dn)
+        return jax.lax.conv_general_dilated(
+            x, w, strides, padding, rhs_dilation=rhs_dilation,
+            dimension_numbers=dn, feature_group_count=feature_groups)
 
     @jax.custom_vjp
     def qconv(x, w, seed, flag):
@@ -174,8 +176,14 @@ def _make_qconv(fmt: str, q_fwd: bool, q_dgrad: bool, q_wgrad: bool,
 def qconv2d(x: jax.Array, w: jax.Array, *, seed: jax.Array, flag: jax.Array,
             strides=(1, 1), padding="SAME", fmt: str = "luq_fp4",
             q_fwd: bool = True, q_dgrad: bool = True, q_wgrad: bool = True,
-            backend: str = None):
-    """Quantization-aware NHWC conv2d (weights HWIO)."""
+            backend: str = None, rhs_dilation=(1, 1), feature_groups: int = 1):
+    """Quantization-aware NHWC conv2d (weights HWIO).
+
+    ``rhs_dilation``/``feature_groups`` map to the same-named
+    ``lax.conv_general_dilated`` knobs; under ghost norm passes those
+    layers use the per-layer direct-norm fallback (the patches unfold
+    identity only covers dense undilated convs — see repro.dp.ghost).
+    """
     backend = qbackend.resolve_backend(backend)
     dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
                                         ("NHWC", "HWIO", "NHWC"))
@@ -186,9 +194,11 @@ def qconv2d(x: jax.Array, w: jax.Array, *, seed: jax.Array, flag: jax.Array,
     if ctx is not None and ctx.mode == "norm":
         fn = ghost.make_ghost_qconv(fmt, q_fwd, q_dgrad, q_wgrad,
                                     tuple(strides), padding, tuple(dn),
-                                    tuple(w.shape[:2]), backend)
+                                    tuple(w.shape[:2]), backend,
+                                    tuple(rhs_dilation), feature_groups)
         return fn(x, w, seed, flag, ctx.tap)
     per_example = ctx is not None and ctx.mode == "grad"
     fn = _make_qconv(fmt, q_fwd, q_dgrad, q_wgrad, tuple(strides), padding,
-                     tuple(dn), backend, per_example)
+                     tuple(dn), backend, per_example, tuple(rhs_dilation),
+                     feature_groups)
     return fn(x, w, seed, flag)

@@ -21,6 +21,7 @@ from repro.dp.engine import make_dp_grad_fn, validate_grad_mode
 from repro.dp.ghost import (ghost_clipped_grad_sum, ghost_per_example_norms,
                             per_example_state_bytes)
 from repro.models.registry import build_model
+from repro.quant.fake_quant import qconv2d
 
 
 # --------------------------------------------------------------------------- #
@@ -58,8 +59,15 @@ def make_batch(cfg, B, seed=1):
                                         (B,), 0, cfg.num_classes)}
 
 
-def both_paths(cfg, fmt, B=6, clip_norm=0.8, mb=None):
-    """(vmap_out, ghost_out, vmap_norms, ghost_norms) for one config."""
+def both_paths(cfg, fmt, B=6, clip_norm=0.8, mb=None, use_aux=True,
+               ghost_microbatch=0):
+    """(vmap_out, ghost_out, vmap_norms, ghost_norms) for one config.
+
+    ``use_aux=True`` runs ghost with the model's GhostAux hooks when the
+    family provides them (full hook coverage — the engine default);
+    ``use_aux=False`` forces the vmapped norm-only fallback for the
+    non-op-hooked leaves (the pre-aux formulation, still supported).
+    """
     model = build_model(cfg, QuantConfig(fmt=fmt))
     params = model.init(jax.random.PRNGKey(0))
     batch = make_batch(cfg, B)
@@ -72,13 +80,16 @@ def both_paths(cfg, fmt, B=6, clip_norm=0.8, mb=None):
     def pel(p, b, r):
         return model.per_example_loss(p, b, r, qflags)
 
+    aux = (model.ghost_aux(qflags)
+           if use_aux and model.ghost_aux is not None else None)
     rng = jax.random.PRNGKey(42)
     vm = jax.jit(lambda p, b: per_example_clipped_grad_sum(
         loss_one, p, b, clip_norm=clip_norm, microbatch_size=mb or B,
         rng=rng))(params, batch)
     gh = jax.jit(lambda p, b: ghost_clipped_grad_sum(
         loss_one, pel, p, b, clip_norm=clip_norm, rng=rng,
-        hooked_mask=model.ghost_mask(p)))(params, batch)
+        hooked_mask=model.ghost_mask(p), aux=aux,
+        ghost_microbatch=ghost_microbatch))(params, batch)
 
     # per-example norms: vmap reference computed directly
     def one_norm(ex):
@@ -89,7 +100,8 @@ def both_paths(cfg, fmt, B=6, clip_norm=0.8, mb=None):
     vmap_norms = jax.jit(jax.vmap(one_norm))(batch)
     _, ghost_norms = jax.jit(lambda p, b: ghost_per_example_norms(
         loss_one, p, b, rng=jax.random.fold_in(rng, 0),
-        hooked_mask=model.ghost_mask(p)))(params, batch)
+        hooked_mask=model.ghost_mask(p), aux=aux,
+        microbatch=ghost_microbatch))(params, batch)
     return vm, gh, vmap_norms, ghost_norms
 
 
@@ -129,11 +141,84 @@ def _assert_parity(cfg, fmt, B=6):
 
 
 def test_ghost_matches_vmap_untied_head():
-    """lm_head (untied) is a non-hooked leaf — exercises the fallback."""
+    """Untied lm_head: the head hook covers a separate leaf (no gather
+    cross term) — full hook coverage must still match vmap."""
     cfg = lm_cfg(tie_embeddings=False)
     (gv, _), (gg, _), vn, gn = both_paths(cfg, "luq_fp4")
     assert_tree_close(gv, gg)
     np.testing.assert_allclose(np.asarray(gn), np.asarray(vn), rtol=1e-4)
+
+
+def test_ghost_matches_vmap_no_aux_fallback():
+    """Without GhostAux the embedding/head/norm leaves go through the
+    vmapped norm-only fallback — the pre-full-hook formulation stays a
+    supported (and correct) configuration."""
+    (gv, _), (gg, _), vn, gn = both_paths(lm_cfg(), "luq_fp4",
+                                          use_aux=False)
+    assert_tree_close(gv, gg)
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(vn), rtol=1e-4)
+
+
+def test_ghost_microbatched_pass1_identical():
+    """ghost_microbatch chunks pass 1 with a lax.scan; per-example
+    independence + per-example quantization make it numerically
+    equivalent to the whole-batch vmap (and to the vmap grad engine)."""
+    (gv, _), (gg, mg), vn, gn = both_paths(lm_cfg(), "luq_fp4", B=6,
+                                           ghost_microbatch=2)
+    assert_tree_close(gv, gg)
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(vn), rtol=1e-4)
+    with pytest.raises(ValueError, match="not divisible"):
+        both_paths(lm_cfg(), "none", B=6, ghost_microbatch=4)
+
+
+def test_dense_lm_zero_fallback_params():
+    """REGRESSION: with the GhostAux hooks (embedding gather Gram,
+    single-chunk LM head, rmsnorm scale taps) dense_lm ghost pass 1 must
+    run with ZERO vmapped-fallback parameters, tied or untied."""
+    for cfg in (lm_cfg(), lm_cfg(tie_embeddings=False)):
+        model = build_model(cfg, QuantConfig(fmt="none"))
+        params = model.init(jax.random.PRNGKey(0))
+        qflags = jnp.ones((cfg.policy_len(),), jnp.float32)
+        aux = model.ghost_aux(qflags)
+        est = per_example_state_bytes(params, model.ghost_mask(params), 32,
+                                      aux=aux)
+        assert est["params_nonhooked"] == 0, (cfg.tie_embeddings, est)
+        assert est["ghost_bytes"] == 0
+
+
+def test_ghost_dilated_grouped_conv_fallback():
+    """Dilated / grouped convs are outside the patches unfold identity;
+    they must fall back PER LAYER (direct norm of the backward's dw)
+    instead of failing the family — parity on a toy model using both."""
+
+    def loss(params, ex, rng):
+        del rng
+        x = ex["x"][None]
+        h = qconv2d(x, params["w1"], seed=jnp.uint32(3),
+                    flag=jnp.float32(1.0), fmt="luq_fp4",
+                    rhs_dilation=(2, 2))
+        h = jax.nn.relu(h)
+        h = qconv2d(h, params["w2"], seed=jnp.uint32(7),
+                    flag=jnp.float32(1.0), fmt="luq_fp4", feature_groups=2)
+        return jnp.sum(h.mean(axis=(1, 2)) ** 2)
+
+    def pel(params, batch, rng):
+        return jax.vmap(lambda ex: loss(params, ex, rng))(batch)
+
+    k = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(k, (3, 3, 4, 8)) * 0.2,
+              "w2": jax.random.normal(jax.random.fold_in(k, 1),
+                                      (3, 3, 4, 8)) * 0.2}
+    batch = {"x": jax.random.normal(jax.random.fold_in(k, 2), (4, 8, 8, 4))}
+    gv, mv = jax.jit(lambda p, b: per_example_clipped_grad_sum(
+        loss, p, b, clip_norm=0.5, microbatch_size=4,
+        rng=jax.random.PRNGKey(9)))(params, batch)
+    gg, mg = jax.jit(lambda p, b: ghost_clipped_grad_sum(
+        loss, pel, p, b, clip_norm=0.5, rng=jax.random.PRNGKey(9),
+        hooked_mask={"w1": True, "w2": True}))(params, batch)
+    assert_tree_close(gv, gg)
+    np.testing.assert_allclose(float(mv["grad_norm_max"]),
+                               float(mg["grad_norm_max"]), rtol=1e-4)
 
 
 def test_ghost_matches_vmap_strided_bottleneck():
@@ -284,6 +369,11 @@ def test_grad_mode_validation():
     with pytest.raises(ValueError, match="fused"):
         validate_grad_mode(DPConfig(grad_mode="ghost",
                                     clip_backend="fused"))
+    with pytest.raises(ValueError, match="ghost_microbatch"):
+        validate_grad_mode(DPConfig(grad_mode="ghost", ghost_microbatch=-1))
+    with pytest.raises(ValueError, match="ghost_sharded"):
+        validate_grad_mode(DPConfig(grad_mode="ghost",
+                                    ghost_sharded="sideways"))
     model = build_model(resnet_cfg(), QuantConfig(fmt="none"))
     hookless = dataclasses.replace(model, per_example_loss=None)
     with pytest.raises(ValueError, match="ghost hooks"):

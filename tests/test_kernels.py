@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import luq_matmul, luq_quantize, clip_and_sum
+from repro.kernels import (luq_matmul, luq_quantize, clip_and_sum,
+                           ghost_norm_sq)
 from repro.kernels import ref
 from repro.kernels.luq_quant import luq_quant_2d
 from repro.kernels.per_sample_clip import per_sample_clip
@@ -108,11 +109,88 @@ def test_clip_and_sum_shape_edge_cases(b, d, block_d):
                                atol=1e-5)
 
 
+@pytest.mark.parametrize("tdd", [(16, 32, 64), (15, 384, 48),
+                                 (8, 100, 200), (130, 768, 384)])
+def test_ghost_norm_fused_matches_quantize_composition(tdd):
+    """The fused ghost-norm kernel (quantize + Gram + tap-reduce in one
+    VMEM pass) must equal the 3-dispatch composition with the pallas
+    quantize kernel — SAME keys, bit-identical draws (``luq_uniform``
+    pins the layout), fp32 tolerance on the reduction."""
+    t, din, dout = tdd
+    key = jax.random.PRNGKey(t * din)
+    kx, kg, k1, k2 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (t, din), jnp.float32)
+    g = jax.random.normal(k2, (t, dout), jnp.float32) * 0.01
+    fused = float(ghost_norm_sq(x, g, kx, kg, interpret=True))
+    xq = luq_quantize(x, kx, interpret=True).astype(jnp.float32)
+    gq = luq_quantize(g, kg, interpret=True).astype(jnp.float32)
+    want = float(jnp.vdot(xq @ xq.T, gq @ gq.T))
+    np.testing.assert_allclose(fused, want, rtol=2e-5)
+    # and the Gram identity itself: equals the direct wgrad norm
+    np.testing.assert_allclose(want, float(jnp.sum((xq.T @ gq) ** 2)),
+                               rtol=2e-4)
+
+
+def test_ghost_norm_over_cap_falls_back_unfused():
+    """Above GHOST_NORM_MAX_T the (T, T) Gram scratches would not fit
+    VMEM on real hardware; the wrapper must fall back to the unfused
+    quantize-then-Gram composition with the same keys (bit-identical)."""
+    from repro.kernels.ops import GHOST_NORM_MAX_T
+    t = GHOST_NORM_MAX_T + 8
+    kx, kg = jax.random.split(jax.random.PRNGKey(11))
+    x = jax.random.normal(kx, (t, 64), jnp.float32)
+    g = jax.random.normal(kg, (t, 32), jnp.float32)
+    got = float(ghost_norm_sq(x, g, kx, kg, interpret=True))
+    xq = luq_quantize(x, kx, interpret=True).astype(jnp.float32)
+    gq = luq_quantize(g, kg, interpret=True).astype(jnp.float32)
+    np.testing.assert_allclose(got, float(jnp.vdot(xq @ xq.T, gq @ gq.T)),
+                               rtol=2e-5)
+
+
+def test_ghost_norm_zero_and_scale_edge_cases():
+    """All-zero operands (alpha guard) and positive scale invariance
+    (the property the ghost reweighted backward relies on)."""
+    kx, kg = jax.random.split(jax.random.PRNGKey(3))
+    z = jnp.zeros((8, 128), jnp.float32)
+    g = jax.random.normal(kg, (8, 128), jnp.float32)
+    assert float(ghost_norm_sq(z, g, kx, kg, interpret=True)) == 0.0
+    x = jax.random.normal(kx, (8, 128), jnp.float32)
+    base = float(ghost_norm_sq(x, g, kx, kg, interpret=True))
+    scaled = float(ghost_norm_sq(x, 0.25 * g, kx, kg, interpret=True))
+    np.testing.assert_allclose(scaled, 0.0625 * base, rtol=1e-5)
+
+
+def test_ghost_norm_backend_dispatch(monkeypatch):
+    """(ghost_norm, luq_fp4) resolves natively on pallas; other formats
+    fall back to ref explicitly; the ref impl matches the ref quantizer
+    composition.  REPRO_QUANT_BACKEND is cleared: this test pins the
+    per-call dispatch semantics, not the env override (which by design
+    beats the request — the CI pallas leg relies on that)."""
+    from repro.quant import backend as qb
+    from repro.quant.formats import luq_fp4
+    monkeypatch.delenv(qb.ENV_VAR, raising=False)
+    impl, actual = qb.get_impl("ghost_norm", "luq_fp4", "pallas")
+    assert actual == "pallas"
+    impl, actual = qb.get_impl("ghost_norm", "fp8_e4m3", "pallas")
+    assert actual == "ref"
+    impl, actual = qb.get_impl("ghost_norm", "luq_fp4", "ref")
+    assert actual == "ref"
+    kx, kg = jax.random.split(jax.random.PRNGKey(5))
+    x = jax.random.normal(kx, (12, 48), jnp.float32)
+    g = jax.random.normal(kg, (12, 24), jnp.float32)
+    got = float(impl(x, g, kx, kg))
+    xq = luq_fp4(x, kx).astype(jnp.float32)
+    gq = luq_fp4(g, kg).astype(jnp.float32)
+    np.testing.assert_allclose(got, float(jnp.vdot(xq @ xq.T, gq @ gq.T)),
+                               rtol=1e-5)
+
+
 def test_kernels_package_exports():
     """The public wrappers and raw kernels are importable from the package
     root (the dispatcher and external callers rely on these names)."""
     import repro.kernels as K
     for name in ("luq_quantize", "luq_matmul", "clip_and_sum",
-                 "luq_quant_2d", "quant_matmul", "per_sample_clip", "ref"):
+                 "ghost_norm_sq", "luq_quant_2d", "quant_matmul",
+                 "per_sample_clip", "ghost_norm_gram", "ref"):
         assert hasattr(K, name), name
         assert name in K.__all__, name
