@@ -21,10 +21,21 @@ or all slots are active.  Throughput is therefore proportional to slot
 lengths and continuous refill preserves.  Reported ``tokens_per_sec``
 counts useful (requested) tokens over the full arrival-to-drain wall;
 ``speedup_compute_only`` excludes arrival gaps.  p50/p99 latency and TTFT
-come from per-request metrics (docs/SERVING.md).
+come from per-request metrics (docs/SERVING.md), with the raw per-request
+rows embedded in the JSON.
+
+``--kv-fmt`` sweeps KV-cache storage formats: for each format the engine
+is measured on the same trace, its cache bytes/slot are reported against
+the fp32 (``none``) pool, and every request's tokens are checked against
+the B=1 oneshot driver at the same format (quantization is deterministic,
+so agreement is exact, not approximate).  The engine's compiled prefill
+program count is asserted against the power-of-two bucketing bound
+``ceil(log2(max_seq))``.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py          # full trace
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke  # CI job
+    PYTHONPATH=src python benchmarks/serve_throughput.py \
+        --smoke --kv-fmt int8                                     # CI kv job
 
 Writes ``BENCH_serve_throughput.json`` (cwd) and prints
 ``serve_throughput,...`` CSV rows (see benchmarks/common.py).
@@ -33,6 +44,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
@@ -111,20 +123,24 @@ def measure_oneshot(plans, params, trace) -> dict:
     Each group pads to its own max prompt/gen; a group starts at
     max(previous group drained, last member arrived).  This is the oneshot
     driver's semantics scaled to a trace: same cache footprint as the
-    engine, no mid-flight admission.
+    engine, no mid-flight admission.  Per-request TTFT is the group's
+    prefill completion minus the request's arrival (every member of a
+    lockstep group gets its first token when the group's batched prefill
+    finishes).
     """
     compute_wall = 0.0
     clock = 0.0                      # simulated timeline incl. arrivals
-    latencies, ticks = [], 0
+    latencies, ttfts, ticks = [], [], 0
     for g, prefill, decode, batch, max_gen in plans:
         t0 = time.perf_counter()
-        oneshot_generate(prefill, decode, params, batch, max_gen)
+        _, tim = oneshot_generate(prefill, decode, params, batch, max_gen)
         dt = time.perf_counter() - t0
         compute_wall += dt
         ticks += max_gen
         start = max(clock, max(t["arrival"] for t in g))
         clock = start + dt
         latencies += [clock - t["arrival"] for t in g]
+        ttfts += [start + tim["prefill_s"] - t["arrival"] for t in g]
     useful = sum(t["gen"] for t in trace)
     decoded_slots = sum(len(g) * mg for g, _, _, _, mg in plans)
     return {
@@ -137,13 +153,17 @@ def measure_oneshot(plans, params, trace) -> dict:
         "tokens_per_sec_compute_only": useful / compute_wall,
         "latency_p50_s": float(np.percentile(latencies, 50)),
         "latency_p99_s": float(np.percentile(latencies, 99)),
+        "ttft_p50_s": float(np.percentile(ttfts, 50)),
+        "ttft_p99_s": float(np.percentile(ttfts, 99)),
     }
 
 
-def prepare_continuous(model, params, trace, *, slots: int, max_seq: int):
-    """Build the engine and warm every prompt-length prefill + decode."""
-    engine = ContinuousEngine(model, params,
-                              ServeConfig(max_slots=slots, max_seq=max_seq))
+def prepare_continuous(model, params, trace, *, slots: int, max_seq: int,
+                       kv_fmt: str = "none"):
+    """Build the engine and warm every prefill bucket + the decode step."""
+    engine = ContinuousEngine(
+        model, params,
+        ServeConfig(max_slots=slots, max_seq=max_seq, kv_fmt=kv_fmt))
     for t in trace:
         engine.submit(t["prompt"], max_new_tokens=t["gen"])
     engine.run()
@@ -163,6 +183,7 @@ def measure_continuous(engine, trace) -> dict:
     return {
         "engine": "continuous", "slots": engine.serve.max_slots,
         "max_seq": engine.serve.max_seq,
+        "kv_fmt": engine.serve.kv_fmt,
         "useful_new_tokens": s["total_new_tokens"],
         "decode_ticks": s["decode_ticks"], "wall_s": wall,
         "idle_wall_s": s["idle_wall_s"],
@@ -175,7 +196,46 @@ def measure_continuous(engine, trace) -> dict:
         "latency_p99_s": s["latency_p99_s"],
         "ttft_p50_s": s["ttft_p50_s"], "ttft_p99_s": s["ttft_p99_s"],
         "queue_wait_p50_s": s["queue_wait_p50_s"],
+        "prefill_programs": engine.prefill_programs,
+        "per_request": engine.metrics.per_request(),
     }
+
+
+def cache_bytes_per_slot(model, slots: int, max_seq: int,
+                         kv_fmt: str) -> float:
+    """KV-pool bytes per slot from the slot cache spec (pos excluded)."""
+    kw = {} if kv_fmt == "none" else {"kv_fmt": kv_fmt}
+    spec = model.slot_cache_spec(slots, max_seq, **kw)
+    total = sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                for name, s in spec.items() if name != "pos")
+    return total / slots
+
+
+def check_agreement(engine, model, params, run, trace) -> bool:
+    """Engine tokens == B=1 oneshot tokens at the same kv_fmt, per request.
+
+    Deterministic row quantization makes this exact: both paths quantize
+    the same K/V rows with the same bf16 scales, so greedy decoding at a
+    matching format must agree token-for-token.
+    """
+    engine.reset()
+    for t in trace:
+        engine.submit(t["prompt"], max_new_tokens=t["gen"])
+    results = engine.run()
+    mesh = make_host_mesh()
+    fns = {}
+    for rid, t in enumerate(trace):
+        cache_len = t["prompt"].size + t["gen"]
+        if cache_len not in fns:
+            fns[cache_len] = build_oneshot_fns(model, run, mesh, 1, cache_len,
+                                               kv_fmt=engine.serve.kv_fmt)
+        prefill, decode = fns[cache_len]
+        ref, _ = oneshot_generate(prefill, decode, params,
+                                  {"tokens": jnp.asarray(t["prompt"])[None]},
+                                  t["gen"])
+        if results[rid].tokens.tolist() != ref[0].tolist():
+            return False
+    return True
 
 
 def main(argv=None):
@@ -186,6 +246,9 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=None)
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (requests/sec)")
+    ap.add_argument("--kv-fmt", default=None,
+                    help="comma-separated KV-cache storage formats to sweep "
+                         "(default: none,int8,luq_fp4; smoke: none)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve_throughput.json")
     args = ap.parse_args(argv)
@@ -198,6 +261,10 @@ def main(argv=None):
     rate = args.rate or 40.0
     gens = (4, 6, 12) if args.smoke else (4, 6, 8, 12, 16, 24, 32, 48)
     max_prompt = 8 if args.smoke else 16
+    kv_fmts = [s.strip() for s in
+               (args.kv_fmt or ("none" if args.smoke
+                                else "none,int8,luq_fp4")).split(",")
+               if s.strip()]
 
     cfg = lm_model(args.smoke)
     model = build_model(cfg, QuantConfig(fmt="none"))
@@ -207,31 +274,61 @@ def main(argv=None):
     trace = make_trace(n, args.seed, max_prompt=max_prompt, gens=gens,
                        rate_hz=rate)
     max_seq = max_prompt + max(gens)
+    prefill_bound = math.ceil(math.log2(max_seq))
 
-    # interleave the timed passes (continuous/oneshot alternating) and take
-    # medians (benchmarks/common.py protocol): this container throttles CPU
-    # under sustained load, so phase-ordered timing would attribute the
-    # slowdown to whichever engine runs last
+    # interleave the timed passes (per-format continuous + oneshot,
+    # alternating) and take medians (benchmarks/common.py protocol): this
+    # container throttles CPU under sustained load, so phase-ordered timing
+    # would attribute the slowdown to whichever engine runs last
     plans = prepare_oneshot(model, params, run, trace, slots=slots)
-    engine = prepare_continuous(model, params, trace, slots=slots,
-                                max_seq=max_seq)
+    engines = {fmt: prepare_continuous(model, params, trace, slots=slots,
+                                       max_seq=max_seq, kv_fmt=fmt)
+               for fmt in kv_fmts}
     reps = 3
-    results = interleave_timed(
-        {"continuous": lambda: measure_continuous(engine, trace),
-         "oneshot": lambda: measure_oneshot(plans, params, trace)},
-        reps=reps)
-    continuous, oneshot = (
-        median_by(results["continuous"], lambda r: r["tokens_per_sec"]),
-        median_by(results["oneshot"], lambda r: r["tokens_per_sec"]))
+    timed = {"oneshot": lambda: measure_oneshot(plans, params, trace)}
+    for fmt in kv_fmts:
+        timed[f"continuous[{fmt}]"] = (
+            lambda e=engines[fmt]: measure_continuous(e, trace))
+    results = interleave_timed(timed, reps=reps)
+    oneshot = median_by(results["oneshot"], lambda r: r["tokens_per_sec"])
+    by_fmt = {fmt: median_by(results[f"continuous[{fmt}]"],
+                             lambda r: r["tokens_per_sec"])
+              for fmt in kv_fmts}
+
+    # primary comparison (headline speedup) stays the fp32 cache when the
+    # sweep includes it, so the committed numbers are comparable across PRs
+    primary = "none" if "none" in by_fmt else kv_fmts[0]
+    continuous = by_fmt[primary]
     speedup = continuous["tokens_per_sec"] / oneshot["tokens_per_sec"]
     speedup_compute = (continuous["tokens_per_sec_compute_only"]
                        / oneshot["tokens_per_sec_compute_only"])
 
-    for r in (oneshot, continuous):
-        emit("serve_throughput", engine=r["engine"],
+    base_bytes = cache_bytes_per_slot(model, slots, max_seq, "none")
+    sweep = {}
+    for fmt in kv_fmts:
+        bps = cache_bytes_per_slot(model, slots, max_seq, fmt)
+        agree = check_agreement(engines[fmt], model, params, run, trace)
+        r = by_fmt[fmt]
+        assert r["prefill_programs"] <= prefill_bound, (
+            f"{r['prefill_programs']} prefill programs exceeds the "
+            f"bucketing bound ceil(log2({max_seq})) = {prefill_bound}")
+        sweep[fmt] = dict(
+            r, cache_bytes_per_slot=bps,
+            bytes_reduction_vs_none=base_bytes / bps,
+            tokens_match_oneshot=agree)
+        emit("serve_throughput", engine=f"continuous[{fmt}]",
              tok_s=round(r["tokens_per_sec"], 2),
              p50_ms=round(r["latency_p50_s"] * 1e3, 1),
              p99_ms=round(r["latency_p99_s"] * 1e3, 1))
+        if not agree:
+            raise SystemExit(
+                f"kv_fmt={fmt}: engine tokens diverge from the oneshot "
+                "reference — deterministic quantization contract broken")
+
+    emit("serve_throughput", engine="oneshot",
+         tok_s=round(oneshot["tokens_per_sec"], 2),
+         p50_ms=round(oneshot["latency_p50_s"] * 1e3, 1),
+         p99_ms=round(oneshot["latency_p99_s"] * 1e3, 1))
     emit("serve_throughput", engine="continuous/oneshot",
          tok_s=round(speedup, 3), p50_ms="-", p99_ms="-")
 
@@ -239,15 +336,18 @@ def main(argv=None):
         "benchmark": "serve_throughput",
         "note": ("useful tokens only; oneshot = sequential lockstep groups "
                  "of `slots` requests, padded to group max prompt/gen, no "
-                 "mid-flight admission; timed passes interleave the two "
+                 "mid-flight admission; timed passes interleave the "
                  "engines and report the median rep to cancel machine "
                  "drift/throttling; speedup_compute_only removes arrival "
                  "waits from BOTH engines (engine idle sleeps / oneshot "
-                 "start gating)"),
+                 "start gating); kv_fmt_sweep reports per-format cache "
+                 "bytes/slot vs the fp32 pool and exact engine-vs-oneshot "
+                 "token agreement (deterministic quantization)"),
         "config": {"requests": n, "slots": slots, "rate_hz": rate,
                    "gens": list(gens), "max_prompt": max_prompt,
                    "max_seq": max_seq, "smoke": args.smoke,
                    "seed": args.seed, "reps": reps,
+                   "kv_fmts": kv_fmts,
                    "model": {"d_model": cfg.d_model,
                              "n_layers": cfg.n_layers,
                              "vocab": cfg.vocab_size}},
@@ -255,13 +355,17 @@ def main(argv=None):
                    "arrival_s": round(t["arrival"], 4)} for t in trace],
         "oneshot": oneshot,
         "continuous": continuous,
+        "kv_fmt_sweep": sweep,
+        "prefill_program_bound": prefill_bound,
         "speedup_tokens_per_sec": speedup,
         "speedup_compute_only": speedup_compute,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out} (speedup {speedup:.2f}x, "
-          f"compute-only {speedup_compute:.2f}x)")
+          f"compute-only {speedup_compute:.2f}x; kv bytes/slot reduction: "
+          + ", ".join(f"{f}={sweep[f]['bytes_reduction_vs_none']:.2f}x"
+                      for f in kv_fmts) + ")")
 
 
 if __name__ == "__main__":

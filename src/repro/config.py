@@ -14,6 +14,14 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+# KV-cache storage formats for serving (ServeConfig.kv_fmt / CLI --kv-fmt).
+# Distinct from QuantConfig.fmt (training fake-quant + logits head): the KV
+# cache is *storage* quantization — deterministic round-to-nearest with one
+# bfloat16 scale per written (token, kv-head) row — dequantized on read
+# inside the decode-attention op (repro.quant.kv_cache).
+KV_CACHE_FORMATS = ("none", "int8", "luq_fp4")
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     """Architecture description.
@@ -209,12 +217,21 @@ class ServeConfig:
     max_new_tokens: int = 32         # default per-request generation budget
     temperature: float = 0.0         # 0 = greedy; >0 = per-slot sampling
     seed: int = 0                    # base of the sampling key schedule
+    # KV-cache storage format (see KV_CACHE_FORMATS above): "none" keeps the
+    # fp32/bf16 compute-dtype cache; "int8"/"luq_fp4" store quantized codes
+    # plus per-(token, kv-head) bfloat16 scales and dequantize inside the
+    # decode-attention op (docs/SERVING.md "Quantized cache layout").
+    kv_fmt: str = "none"
 
     def __post_init__(self):
         if self.max_slots < 1:
             raise ValueError("ServeConfig.max_slots must be >= 1")
         if self.max_seq < 2:
             raise ValueError("ServeConfig.max_seq must be >= 2")
+        if self.kv_fmt not in KV_CACHE_FORMATS:
+            raise ValueError(
+                f"ServeConfig.kv_fmt must be one of {KV_CACHE_FORMATS}, "
+                f"got {self.kv_fmt!r}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,15 +8,19 @@ under ``backend="pallas"``.  The raw kernels (``luq_quant_2d``,
 pre-padded tile-multiple shapes; ``ref`` holds their pure-jnp oracles.
 """
 from repro.kernels.ops import (luq_quantize, luq_matmul, clip_and_sum,
-                               ghost_norm_sq)
+                               ghost_norm_sq, kv_quant_rows,
+                               decode_attn_fused)
 from repro.kernels.luq_quant import luq_quant_2d
 from repro.kernels.quant_matmul import quant_matmul
 from repro.kernels.per_sample_clip import per_sample_clip
 from repro.kernels.ghost_norm import ghost_norm_gram
+from repro.kernels.decode_attn import decode_attn_call, kv_rowquant_2d
 from repro.kernels import ref
 
 __all__ = [
     "luq_quantize", "luq_matmul", "clip_and_sum", "ghost_norm_sq",
+    "kv_quant_rows", "decode_attn_fused",
     "luq_quant_2d", "quant_matmul", "per_sample_clip", "ghost_norm_gram",
+    "decode_attn_call", "kv_rowquant_2d",
     "ref",
 ]

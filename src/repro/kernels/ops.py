@@ -14,10 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.decode_attn import decode_attn_call, kv_rowquant_2d
 from repro.kernels.ghost_norm import ghost_norm_gram
 from repro.kernels.luq_quant import luq_quant_2d
 from repro.kernels.per_sample_clip import per_sample_clip
 from repro.kernels.quant_matmul import quant_matmul
+from repro.quant import kv_cache as kvc
 
 
 def _interpret_default() -> bool:
@@ -149,6 +151,84 @@ def ghost_norm_sq(x: jax.Array, g: jax.Array, key_x: jax.Array,
     out = ghost_norm_gram(pad(x), pad(ux), pad(g), pad(ug), alpha_x,
                           alpha_g, block_d=block_d, interpret=interpret)
     return out[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block_rows",
+                                             "interpret"))
+def kv_quant_rows(x: jax.Array, fmt: str, block_rows: int = 128,
+                  interpret=None):
+    """Fused KV-row quantization of ``(..., head_dim)`` K/V rows.
+
+    Returns ``(codes, scales)`` exactly like the ref
+    ``repro.quant.kv_cache.kv_quant``: codes ``(..., code_dim)`` (int8, or
+    nibble-packed uint8 for luq_fp4) and per-row bf16 scales ``(...,)``.
+    The kernel computes the per-row amax, the bf16-rounded scale, and the
+    codes in one VMEM pass per row block; rows are padded to a
+    ``block_rows`` multiple and head_dim to a lane multiple (zero columns
+    never raise a nonzero row's amax, and all-zero pad rows get scale 0).
+    Deterministic, so it is bit-compatible with the ref impl by
+    construction — both encode with the shared elementwise math in
+    ``repro.quant.kv_cache``.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = x.shape
+    hd = shape[-1]
+    _, code_dim = kvc.code_spec(fmt, hd)
+    rows = x.reshape(-1, hd).astype(jnp.float32)
+    r = rows.shape[0]
+    pr = (-r) % block_rows
+    pd = (-hd) % 128
+    if pr or pd:
+        rows = jnp.pad(rows, ((0, pr), (0, pd)))
+    codes, scales = kv_rowquant_2d(rows, fmt, block_rows=block_rows,
+                                   interpret=interpret)
+    codes = codes[:r, :hd]
+    scales = scales[:r, 0].astype(kvc.SCALE_DTYPE)
+    if fmt == "luq_fp4":
+        codes = kvc.fp4_pack(codes.astype(jnp.uint8))
+    return (codes.reshape(shape[:-1] + (code_dim,)),
+            scales.reshape(shape[:-1]))
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "n_kv", "scale",
+                                             "interpret"))
+def decode_attn_fused(q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
+                      k_scale: jax.Array, v_scale: jax.Array, pos, *,
+                      fmt: str, n_kv: int, scale: float, interpret=None):
+    """Fused decode attention over a quantized slot-pool cache.
+
+    Same signature/semantics as ``repro.quant.kv_cache.ref_decode_attn``
+    for the quantized formats: ``q`` (B, H, hd), stored code rows
+    (B, KV, S, code_dim) with (B, KV, S) bf16 scales, ``pos`` scalar or
+    (B,) per-slot positions.  One VMEM pass per (slot, kv-head): decode,
+    scale-fold, mask, softmax, PV (``repro.kernels.decode_attn``).
+    Padding: q-head groups to a sublane multiple, head_dim (packed dim
+    for luq_fp4) to a lane multiple, S to a sublane multiple — padded
+    rows carry zero codes/scales and masked positions, contributing
+    exactly zero.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    b, hp, hd = q.shape
+    g = hp // n_kv
+    s = k_codes.shape[2]
+    dp = k_codes.shape[3]
+    if fmt == "luq_fp4":
+        pad_dp = (-dp) % 64          # packed dim -> 128 decoded lanes
+        hd_padded = 2 * (dp + pad_dp)
+    else:
+        pad_dp = (-dp) % 128
+        hd_padded = dp + pad_dp
+    pg, ps = (-g) % 8, (-s) % 8
+    qg = q.reshape(b, n_kv, g, hd).astype(jnp.float32)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, pg), (0, hd_padded - hd)))
+    kc = jnp.pad(k_codes, ((0, 0), (0, 0), (0, ps), (0, pad_dp)))
+    vc = jnp.pad(v_codes, ((0, 0), (0, 0), (0, ps), (0, pad_dp)))
+    ks = jnp.pad(k_scale.astype(jnp.float32), ((0, 0), (0, 0), (0, ps)))
+    vs = jnp.pad(v_scale.astype(jnp.float32), ((0, 0), (0, 0), (0, ps)))
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,)).reshape(b, 1)
+    ctx = decode_attn_call(qg, kc, ks, vc, vs, pos_b, fmt=fmt, scale=scale,
+                           interpret=interpret)
+    return ctx[:, :, :g, :hd].reshape(b, hp, hd)
 
 
 @functools.partial(jax.jit, static_argnames=("clip_norm", "block_d",

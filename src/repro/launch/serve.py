@@ -12,9 +12,12 @@
 Quantized serving: ``--quant-fmt luq_fp4 --backend pallas`` routes the
 logits head through the quantizer-backend dispatcher's fused
 quantize-matmul (``repro.quant.backend``) on either engine;
-``REPRO_QUANT_BACKEND`` overrides ``--backend``.  See docs/SERVING.md for
-the engine's slot lifecycle and docs/QUANTIZATION.md for the dispatch
-rules.
+``REPRO_QUANT_BACKEND`` overrides ``--backend``.  Independently,
+``--kv-fmt int8|luq_fp4`` stores the KV cache itself quantized (codes +
+per-row bf16 scales) and decodes through the dispatched ``decode_attn``
+op — fused dequant-attention on the pallas backend.  See docs/SERVING.md
+for the engine's slot lifecycle and docs/QUANTIZATION.md for the
+dispatch rules.
 
 The engine logic lives in ``repro.serve``; this module only parses flags,
 builds the model, and prints results.
@@ -59,7 +62,7 @@ def run_oneshot(model, params, mesh, run, args) -> None:
     """Legacy path: one fixed batch, synchronous prefill, lockstep decode."""
     cache_len = args.prompt_len + args.gen
     prefill, decode = build_oneshot_fns(model, run, mesh, args.batch,
-                                        cache_len)
+                                        cache_len, kv_fmt=args.kv_fmt)
     key = jax.random.PRNGKey(args.seed)
     batch = _random_batch(model, key, args.batch, args.prompt_len)
     gen, timings = oneshot_generate(prefill, decode, params, batch, args.gen,
@@ -78,7 +81,8 @@ def run_continuous(model, params, args) -> None:
     serve = ServeConfig(max_slots=args.slots,
                         max_seq=args.prompt_len + args.gen,
                         max_new_tokens=args.gen,
-                        temperature=args.temperature, seed=args.seed)
+                        temperature=args.temperature, seed=args.seed,
+                        kv_fmt=args.kv_fmt)
     engine = ContinuousEngine(model, params, serve)
     key = jax.random.PRNGKey(args.seed)
     n_requests = args.requests or args.slots
@@ -126,6 +130,12 @@ def main(argv=None):
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
                     help="quantizer backend for --quant-fmt "
                          "(REPRO_QUANT_BACKEND overrides)")
+    ap.add_argument("--kv-fmt", default="none",
+                    choices=["none", "int8", "luq_fp4"],
+                    help="KV-cache storage format (both engines): "
+                         "quantized caches store codes + per-row bf16 "
+                         "scales and attend through the dispatched "
+                         "decode_attn op (docs/SERVING.md)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

@@ -290,10 +290,19 @@ class ServeSetup:
 
 
 def build_serve_setup(model: Model, run: RunConfig, mesh: Mesh,
-                      batch_size: int, seq_len: int) -> ServeSetup:
+                      batch_size: int, seq_len: int,
+                      kv_fmt: str = "none") -> ServeSetup:
     cfg = model.config
     rules = pt.merge_rules(pt.DEFAULT_RULES, cfg.sharding_overrides)
     resolver = pt.activation_resolver(mesh, rules)
+
+    if kv_fmt not in model.kv_formats:
+        raise ValueError(
+            f"model family {cfg.family!r} does not support "
+            f"kv_fmt={kv_fmt!r} (supported: {model.kv_formats})")
+    # Only pass the kwarg for quantized formats so ("none",)-only families
+    # keep their original zero-extra-arg serve hook signatures.
+    kv_kw = {} if kv_fmt == "none" else {"kv_fmt": kv_fmt}
 
     abstract_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     param_sh = pt.tree_shardings(model.param_axes(), abstract_params,
@@ -301,18 +310,18 @@ def build_serve_setup(model: Model, run: RunConfig, mesh: Mesh,
     abstract_batch = model.batch_spec(batch_size, seq_len)
     batch_sh = pt.tree_shardings(model.batch_axes(), abstract_batch,
                                  mesh, rules)
-    abstract_cache = model.cache_spec(batch_size, seq_len)
-    cache_sh = pt.tree_shardings(model.cache_axes(), abstract_cache,
+    abstract_cache = model.cache_spec(batch_size, seq_len, **kv_kw)
+    cache_sh = pt.tree_shardings(model.cache_axes(**kv_kw), abstract_cache,
                                  mesh, rules)
     token_sh = pt.named_sharding(("batch",), (batch_size,), mesh, rules)
 
     def prefill_fn(params, batch):
         with partitioning_context(resolver):
-            return model.prefill(params, batch, cache_len=seq_len)
+            return model.prefill(params, batch, cache_len=seq_len, **kv_kw)
 
     def decode_fn(params, cache, token):
         with partitioning_context(resolver):
-            return model.decode_step(params, cache, token)
+            return model.decode_step(params, cache, token, **kv_kw)
 
     return ServeSetup(
         prefill_fn=prefill_fn, decode_fn=decode_fn,

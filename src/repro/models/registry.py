@@ -32,6 +32,13 @@ class Model:
     # which slots advance this tick.
     decode_slots: Optional[Callable] = None
     slot_cache_spec: Optional[Callable] = None  # (n_slots, max_seq) -> specs
+    # KV-cache storage formats this family's serve path supports
+    # (repro.config.KV_CACHE_FORMATS subset).  Families that accept a
+    # ``kv_fmt`` kwarg on prefill/decode_step/decode_slots/cache_spec/
+    # cache_axes/slot_cache_spec list the quantized formats here; callers
+    # only pass the kwarg for formats beyond "none", so ("none",)-only
+    # families keep their original signatures.
+    kv_formats: tuple = ("none",)
     # ghost-clipping support (repro.dp.ghost; DPConfig.grad_mode="ghost"):
     # per_example_loss(params, batch, rng, qflags) -> (B,) batched losses
     # (row i == loss_fn on example i alone); ghost_mask(params) -> bool

@@ -301,27 +301,76 @@ def make_ghost_aux(qflags, cfg: ModelConfig, quant: QuantConfig):
 # --------------------------------------------------------------------------- #
 # serving: prefill + decode with KV cache
 # --------------------------------------------------------------------------- #
-def kv_cache_spec(cfg: ModelConfig, batch: int, seq_len: int):
+def _kv_impls(kv_fmt: str, quant: Optional[QuantConfig]):
+    """Resolve the (kv_quant, decode_attn) impls for a cache format.
+
+    Backend selection rides the same knob as the other quant ops
+    (``QuantConfig.backend``, overridden by ``REPRO_QUANT_BACKEND``);
+    formats a backend lacks fall back to ref explicitly.  Resolution is
+    a trace-time (python) lookup: the format is structural (it changes
+    the cache pytree), so switching it recompiles by construction, and
+    nothing else about the policy is baked in — per-tick values (tokens,
+    positions, active mask) stay traced.
+    """
+    from repro.quant import backend as qbackend
+
+    be = quant.backend if quant is not None else None
+    kvq, _ = qbackend.get_kv_quant(kv_fmt, be)
+    attn, _ = qbackend.get_decode_attn(kv_fmt, be)
+    return kvq, attn
+
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, seq_len: int,
+                  kv_fmt: str = "none"):
+    from repro.quant import kv_cache as kvc
+
     cd = jnp.dtype(cfg.compute_dtype)
     L, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-    return {
-        "k": jax.ShapeDtypeStruct((L, batch, kv, seq_len, hd), cd),
-        "v": jax.ShapeDtypeStruct((L, batch, kv, seq_len, hd), cd),
+    code_dt, code_dim = kvc.code_spec(kv_fmt, hd)
+    spec = {
+        "k": jax.ShapeDtypeStruct((L, batch, kv, seq_len, code_dim),
+                                  code_dt or cd),
+        "v": jax.ShapeDtypeStruct((L, batch, kv, seq_len, code_dim),
+                                  code_dt or cd),
         "pos": jax.ShapeDtypeStruct((), jnp.int32),
     }
+    if kv_fmt != "none":
+        sds = jax.ShapeDtypeStruct((L, batch, kv, seq_len), kvc.SCALE_DTYPE)
+        spec["k_scale"] = sds
+        spec["v_scale"] = sds
+    return spec
 
 
-def kv_cache_axes(cfg: ModelConfig):
-    return {
+def kv_cache_axes(cfg: ModelConfig, kv_fmt: str = "none"):
+    axes = {
         "k": ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
         "v": ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
         "pos": None,
     }
+    if kv_fmt != "none":
+        axes["k_scale"] = ("layers", "batch", "kv_heads", "kv_seq")
+        axes["v_scale"] = ("layers", "batch", "kv_heads", "kv_seq")
+    return axes
 
 
 def prefill(params, batch, cfg: ModelConfig, quant: QuantConfig,
-            cache_len: Optional[int] = None):
-    """Run the full prompt; return (last-token logits, filled KV cache)."""
+            cache_len: Optional[int] = None, kv_fmt: str = "none",
+            prompt_len=None):
+    """Run the full prompt; return (last-token logits, filled KV cache).
+
+    ``prompt_len`` (None or a traced int32 scalar) supports bucketed
+    prefill: the token batch may be padded beyond the real prompt, and
+    the last-token logits / cache position / logits-head key fold are
+    taken at ``prompt_len`` instead of the padded length.  Padding is
+    semantics-preserving because attention is causal (rows < prompt_len
+    never see the pad) and every cache row at index >= pos is masked by
+    ``decode_attend`` until a decode tick overwrites it — the same
+    contract that already covers stale KV in reused slots.
+
+    ``kv_fmt`` selects the cache storage format: quantized formats write
+    the scanned K/V rows through the dispatched ``kv_quant`` op and the
+    cache grows per-(token, head) bf16 scale arrays (docs/SERVING.md).
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
     cache_len = cache_len or S
@@ -353,15 +402,28 @@ def prefill(params, batch, cfg: ModelConfig, quant: QuantConfig,
 
     x, (ks, vs) = jax.lax.scan(
         body, x, (params["blocks"], qflags, jnp.arange(cfg.n_layers)))
-    h_last = cm.rmsnorm(x[:, -1], params["final_norm"]).astype(jnp.float32)
+    if prompt_len is None:
+        plen = jnp.asarray(S, jnp.int32)
+        x_last = x[:, -1]
+    else:
+        plen = jnp.asarray(prompt_len, jnp.int32)
+        x_last = jax.lax.dynamic_slice_in_dim(x, plen - 1, 1, axis=1)[:, 0]
+    h_last = cm.rmsnorm(x_last, params["final_norm"]).astype(jnp.float32)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
     # even folds = prefill, odd folds = decode (pos==S after prefill, so a
     # bare fold of the position would reuse the first decode step's key)
     logits = cm.qlogits(h_last, head, quant_cfg=quant,
-                        key=jax.random.fold_in(jax.random.PRNGKey(17), 2 * S))
-    cache = {"k": lc(ks, "layers", "batch", "kv_heads", "kv_seq", "head_dim"),
-             "v": lc(vs, "layers", "batch", "kv_heads", "kv_seq", "head_dim"),
-             "pos": jnp.asarray(S, jnp.int32)}
+                        key=jax.random.fold_in(jax.random.PRNGKey(17),
+                                               2 * plen))
+    ks = lc(ks, "layers", "batch", "kv_heads", "kv_seq", "head_dim")
+    vs = lc(vs, "layers", "batch", "kv_heads", "kv_seq", "head_dim")
+    cache = {"k": ks, "v": vs, "pos": plen}
+    if kv_fmt != "none":
+        kvq, _ = _kv_impls(kv_fmt, quant)
+        kc, ksc = kvq(ks)
+        vc, vsc = kvq(vs)
+        cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc,
+                 "pos": plen}
     return logits, cache
 
 
@@ -373,54 +435,78 @@ def decode_attend(q, k_cache, v_cache, pos, cfg: ModelConfig):
     each slot attends to its own prefix only).  Cache entries beyond a row's
     position are masked to exactly zero probability, so a zero-padded cache
     of any length yields bit-identical attention output.
+
+    This is the ``kv_fmt="none"`` case of the dispatched ``decode_attn``
+    op; the historical pure-jnp math lives in
+    :func:`repro.quant.kv_cache.ref_decode_attn` (bit-for-bit identical)
+    and ``_decode_trunk`` routes every format — including ``none`` —
+    through the dispatcher.  This thin alias stays for direct callers.
     """
-    B, hp, hd = q.shape
-    kv = cfg.n_kv_heads
-    g = hp // kv
-    qg = q.reshape(B, kv, g, hd)
-    scale = 1.0 / math.sqrt(cfg.head_dim)
-    scores = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
-                        k_cache.astype(jnp.float32)) * scale
-    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
-    valid = (jnp.arange(k_cache.shape[2])[None, None, None, :]
-             <= pos_b[:, None, None, None])
-    scores = jnp.where(valid, scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    ctx = jnp.einsum("bkgs,bksd->bkgd", probs.astype(v_cache.dtype), v_cache)
-    return ctx.reshape(B, hp, hd)
+    from repro.quant import kv_cache as kvc
+    return kvc.ref_decode_attn("none", q, k_cache, v_cache, None, None, pos,
+                               n_kv=cfg.n_kv_heads,
+                               scale=1.0 / math.sqrt(cfg.head_dim))
 
 
-def _decode_trunk(params, cache, token, pos, cfg: ModelConfig):
+def _decode_trunk(params, cache, token, pos, cfg: ModelConfig,
+                  quant: Optional[QuantConfig] = None, kv_fmt: str = "none"):
     """Shared one-token transformer trunk for lockstep and slot decode.
 
     ``pos`` is a (B,) per-row position vector (lockstep decode broadcasts
     its scalar); each row's KV is written at its own position and attends
     to its own prefix.  Returns the final-norm hidden states (B, d) f32
-    and the updated (ks, vs) stacks — the logits-head key schedule is the
-    one place the two decode modes legitimately differ, so it stays with
-    the callers.
+    and the updated cache arrays (everything but ``pos``) — the
+    logits-head key schedule is the one place the two decode modes
+    legitimately differ, so it stays with the callers.
+
+    Quantized cache formats write each row through the dispatched
+    ``kv_quant`` op (codes + per-(row, head) bf16 scale) and attend
+    through the dispatched ``decode_attn`` op, which fuses dequant into
+    the QK/PV contractions on the pallas backend.  Write-then-attend
+    order is what makes bucketed prefill and slot reuse safe: the row at
+    the slot's own position is always fresh before attention reads it,
+    and rows beyond ``pos`` are masked.
     """
     cd = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], token, axis=0).astype(cd)
     if cfg.family == "dense_lm":
         x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
     positions = pos[:, None]                             # (B, 1)
+    quantized = kv_fmt != "none"
+    kvq, attend = _kv_impls(kv_fmt, quant)
+    attn_scale = 1.0 / math.sqrt(cfg.head_dim)
 
-    # per-row cache write: (KV, S, hd) gets a (KV, 1, hd) slab at pos_i
+    # per-row cache write: (KV, S, Dc) gets a (KV, 1, Dc) slab at pos_i;
+    # scale rows (KV, S) get a (KV, 1) slab
     write = jax.vmap(
         lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0)))
+    swrite = jax.vmap(
+        lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p)))
 
     def body(carry, xs):
-        blk, kc, vc = xs
+        if quantized:
+            blk, kc, vc, ksc, vsc = xs
+        else:
+            blk, kc, vc = xs
+            ksc = vsc = None
         h = cm.rmsnorm(carry, blk["attn_norm"]).astype(cd)
         q = jnp.einsum("bd,dhk->bhk", h, blk["wq"].astype(cd))
         k = jnp.einsum("bd,dhk->bhk", h, blk["wk"].astype(cd))
         v = jnp.einsum("bd,dhk->bhk", h, blk["wv"].astype(cd))
         q = cm.rope(q[:, None], positions, cfg.rope_theta)[:, 0]
         k = cm.rope(k[:, None], positions, cfg.rope_theta)[:, 0]
-        kc = write(kc, k[:, :, None, :].astype(kc.dtype), pos)
-        vc = write(vc, v[:, :, None, :].astype(vc.dtype), pos)
-        ctx = decode_attend(q, kc, vc, pos, cfg)
+        if quantized:
+            k_codes, k_sc = kvq(k)                       # (B, KV, Dc) codes
+            v_codes, v_sc = kvq(v)
+            kc = write(kc, k_codes[:, :, None, :].astype(kc.dtype), pos)
+            vc = write(vc, v_codes[:, :, None, :].astype(vc.dtype), pos)
+            ksc = swrite(ksc, k_sc[:, :, None].astype(ksc.dtype), pos)
+            vsc = swrite(vsc, v_sc[:, :, None].astype(vsc.dtype), pos)
+        else:
+            kc = write(kc, k[:, :, None, :].astype(kc.dtype), pos)
+            vc = write(vc, v[:, :, None, :].astype(vc.dtype), pos)
+        ctx = attend(q, kc, vc, ksc, vsc, pos,
+                     n_kv=cfg.n_kv_heads, scale=attn_scale)
         attn_out = jnp.einsum("bhk,hkd->bd", ctx.astype(cd),
                               blk["wo"].astype(cd))
         x2 = carry + attn_out
@@ -429,48 +515,59 @@ def _decode_trunk(params, cache, token, pos, cfg: ModelConfig):
         up = jnp.einsum("bd,df->bf", h2, blk["wi_up"].astype(cd))
         act = _activation(gate, up, cfg.mlp_activation)
         x2 = x2 + jnp.einsum("bf,fd->bd", act, blk["wo_mlp"].astype(cd))
+        if quantized:
+            return x2, (kc, vc, ksc, vsc)
         return x2, (kc, vc)
 
-    x, (ks, vs) = jax.lax.scan(
-        body, x, (params["blocks"], cache["k"], cache["v"]))
-    return cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32), ks, vs
+    if quantized:
+        xs = (params["blocks"], cache["k"], cache["v"],
+              cache["k_scale"], cache["v_scale"])
+        x, (ks, vs, kss, vss) = jax.lax.scan(body, x, xs)
+        upd = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+    else:
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]))
+        upd = {"k": ks, "v": vs}
+    return cm.rmsnorm(x, params["final_norm"]).astype(jnp.float32), upd
 
 
-def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig):
+def decode_step(params, cache, token, cfg: ModelConfig, quant: QuantConfig,
+                kv_fmt: str = "none"):
     """Append one token; returns (logits, new cache)."""
     B = token.shape[0]
     pos = cache["pos"]
-    h_last, ks, vs = _decode_trunk(params, cache, token,
-                                   jnp.full((B,), pos, jnp.int32), cfg)
+    h_last, upd = _decode_trunk(params, cache, token,
+                                jnp.full((B,), pos, jnp.int32), cfg,
+                                quant=quant, kv_fmt=kv_fmt)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
     logits = cm.qlogits(h_last, head, quant_cfg=quant,
                         key=jax.random.fold_in(jax.random.PRNGKey(17),
                                                2 * pos + 1))
-    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    new_cache = dict(upd, pos=pos + 1)
     return logits, new_cache
 
 
 # --------------------------------------------------------------------------- #
 # continuous batching: slot-pool cache + fused masked decode
 # --------------------------------------------------------------------------- #
-def slot_cache_spec(cfg: ModelConfig, n_slots: int, max_seq: int):
+def slot_cache_spec(cfg: ModelConfig, n_slots: int, max_seq: int,
+                    kv_fmt: str = "none"):
     """Slot-pool KV cache: like ``kv_cache_spec`` but with per-slot positions.
 
     The batch axis indexes *slots* (not requests); ``pos`` is a (n_slots,)
     vector so every slot tracks its own sequence length, which is what lets
-    requests of different lengths share one fused decode step.
+    requests of different lengths share one fused decode step.  Quantized
+    ``kv_fmt`` values swap the K/V arrays for code arrays and add
+    per-(slot, token, kv-head) bf16 scale arrays, exactly as in
+    ``kv_cache_spec``.
     """
-    cd = jnp.dtype(cfg.compute_dtype)
-    L, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-    return {
-        "k": jax.ShapeDtypeStruct((L, n_slots, kv, max_seq, hd), cd),
-        "v": jax.ShapeDtypeStruct((L, n_slots, kv, max_seq, hd), cd),
-        "pos": jax.ShapeDtypeStruct((n_slots,), jnp.int32),
-    }
+    spec = kv_cache_spec(cfg, n_slots, max_seq, kv_fmt=kv_fmt)
+    spec["pos"] = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    return spec
 
 
 def decode_slots(params, cache, tokens, active, cfg: ModelConfig,
-                 quant: QuantConfig):
+                 quant: QuantConfig, kv_fmt: str = "none"):
     """One fused decode tick across all slots at per-slot positions.
 
     ``tokens``: (K,) int32 last token of each slot; ``active``: (K,) bool —
@@ -486,7 +583,8 @@ def decode_slots(params, cache, tokens, active, cfg: ModelConfig,
     draw is bit-identical to the oneshot driver's.
     """
     pos = cache["pos"]                                   # (K,)
-    h_last, ks, vs = _decode_trunk(params, cache, tokens, pos, cfg)
+    h_last, upd = _decode_trunk(params, cache, tokens, pos, cfg,
+                                quant=quant, kv_fmt=kv_fmt)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
     if quant is None or quant.fmt == "none":
         logits = cm.qlogits(h_last, head, quant_cfg=quant,
@@ -501,8 +599,7 @@ def decode_slots(params, cache, tokens, active, cfg: ModelConfig,
         logits = jax.vmap(
             lambda hrow, k: cm.qlogits(hrow[None], head, quant_cfg=quant,
                                        key=k)[0])(h_last, keys)
-    new_cache = {"k": ks, "v": vs,
-                 "pos": pos + active.astype(jnp.int32)}
+    new_cache = dict(upd, pos=pos + active.astype(jnp.int32))
     return logits, new_cache
 
 
@@ -533,9 +630,10 @@ def build_dense_lm(cfg: ModelConfig, quant: QuantConfig) -> Model:
         prefill=functools.partial(prefill, cfg=cfg, quant=quant),
         decode_step=functools.partial(decode_step, cfg=cfg, quant=quant),
         cache_spec=functools.partial(kv_cache_spec, cfg),
-        cache_axes=lambda: kv_cache_axes(cfg),
+        cache_axes=lambda **kw: kv_cache_axes(cfg, **kw),
         decode_slots=functools.partial(decode_slots, cfg=cfg, quant=quant),
         slot_cache_spec=functools.partial(slot_cache_spec, cfg),
+        kv_formats=("none", "int8", "luq_fp4"),
         per_example_loss=functools.partial(lm_loss, cfg=cfg, quant=quant,
                                            per_example=True),
         ghost_mask=ghost_mask,

@@ -24,6 +24,20 @@ Three ops are dispatched:
                 quantize + Gram + tap-reduce into one VMEM pass
                 (``repro.kernels.ghost_norm``), the ref impl composes the
                 quantizer with the mixed-ghost-norm reduction.
+``"kv_quant"``  ``kvq(x) -> (codes, scales)`` — deterministic per-row
+                quantization of written K/V cache rows (serve path;
+                formats are the KV *storage* formats ``none|int8|luq_fp4``
+                of ``repro.quant.kv_cache``, not the training formats);
+                the pallas impl fuses amax + scale + encode into one VMEM
+                pass per row block (``repro.kernels.decode_attn``).
+``"decode_attn"`` ``attn(q, kc, vc, ks, vs, pos, *, n_kv, scale) -> ctx``
+                — one-token GQA attention over the quantized slot-pool
+                cache; the pallas impl fuses dequantization into the QK
+                and PV contractions with per-slot position masking and
+                softmax in one VMEM pass per (slot, kv-head); the ref
+                impl dequantizes and runs the plain-jnp attention (for
+                ``none`` it IS the historical ``decode_attend`` math,
+                bit-for-bit).
 
 Backend selection: the ``REPRO_QUANT_BACKEND`` environment variable
 overrides everything (so CI can force the pallas leg without touching
@@ -45,7 +59,8 @@ from repro.quant import formats
 ENV_VAR = "REPRO_QUANT_BACKEND"
 DEFAULT_BACKEND = "ref"
 BACKENDS = ("ref", "pallas")
-OPS = ("quantize", "matmul", "clip_sum", "ghost_norm")
+OPS = ("quantize", "matmul", "clip_sum", "ghost_norm", "kv_quant",
+       "decode_attn")
 
 # fmt sentinel for format-agnostic ops (clip_sum)
 ANY_FORMAT = "*"
@@ -108,6 +123,20 @@ def get_quantizer(fmt: str, backend: str | None = None):
 def get_matmul(fmt: str, backend: str | None = None):
     """``(mm(a, b, key) -> (M, N) f32, actual_backend)``."""
     return get_impl("matmul", fmt, backend)
+
+
+def get_kv_quant(fmt: str, backend: str | None = None):
+    """``(kvq(x) -> (codes, scales), actual_backend)`` — KV cache rows.
+
+    ``fmt`` is a KV *storage* format (``repro.config.KV_CACHE_FORMATS``),
+    orthogonal to the training formats the other ops use.
+    """
+    return get_impl("kv_quant", fmt, backend)
+
+
+def get_decode_attn(fmt: str, backend: str | None = None):
+    """``(attn(q, kc, vc, ks, vs, pos, *, n_kv, scale), actual_backend)``."""
+    return get_impl("decode_attn", fmt, backend)
 
 
 def get_clip_sum(backend: str | None = None):
@@ -173,11 +202,33 @@ def _ref_ghost_norm(fmt: str) -> Callable:
     return gn
 
 
+def _ref_kv_quant(fmt: str) -> Callable:
+    def kvq(x):
+        from repro.quant import kv_cache
+        return kv_cache.kv_quant(fmt, x)
+
+    return kvq
+
+
+def _ref_decode_attn(fmt: str) -> Callable:
+    def attn(q, kc, vc, ks, vs, pos, *, n_kv, scale):
+        from repro.quant import kv_cache
+        return kv_cache.ref_decode_attn(fmt, q, kc, vc, ks, vs, pos,
+                                        n_kv=n_kv, scale=scale)
+
+    return attn
+
+
 for _fmt in formats._FORMATS:
     register("quantize", _fmt, "ref", formats.make_quantizer(_fmt))
     register("matmul", _fmt, "ref", _ref_matmul(_fmt))
     register("ghost_norm", _fmt, "ref", _ref_ghost_norm(_fmt))
 register("clip_sum", ANY_FORMAT, "ref", _ref_clip_sum)
+# KV-cache ops use the storage formats (repro.config.KV_CACHE_FORMATS),
+# not the training formats above — "int8" exists only here.
+for _fmt in ("none", "int8", "luq_fp4"):
+    register("kv_quant", _fmt, "ref", _ref_kv_quant(_fmt))
+    register("decode_attn", _fmt, "ref", _ref_decode_attn(_fmt))
 
 
 # --------------------------------------------------------------------------- #
@@ -206,7 +257,29 @@ def _pallas_ghost_norm(xmat, gmat, key_x, key_g):
     return ghost_norm_sq(xmat, gmat, key_x, key_g)
 
 
+def _pallas_kv_quant(fmt: str) -> Callable:
+    def kvq(x):
+        from repro.kernels.ops import kv_quant_rows
+        return kv_quant_rows(x, fmt)
+
+    return kvq
+
+
+def _pallas_decode_attn(fmt: str) -> Callable:
+    def attn(q, kc, vc, ks, vs, pos, *, n_kv, scale):
+        from repro.kernels.ops import decode_attn_fused
+        return decode_attn_fused(q, kc, vc, ks, vs, pos, fmt=fmt,
+                                 n_kv=n_kv, scale=scale)
+
+    return attn
+
+
 register("quantize", "luq_fp4", "pallas", _pallas_quantize)
 register("matmul", "luq_fp4", "pallas", _pallas_matmul)
 register("clip_sum", ANY_FORMAT, "pallas", _pallas_clip_sum)
 register("ghost_norm", "luq_fp4", "pallas", _pallas_ghost_norm)
+# kv_fmt="none" has no fused kernel (there is nothing to dequantize);
+# it falls back to ref explicitly via get_impl, like every missing format
+for _fmt in ("int8", "luq_fp4"):
+    register("kv_quant", _fmt, "pallas", _pallas_kv_quant(_fmt))
+    register("decode_attn", _fmt, "pallas", _pallas_decode_attn(_fmt))

@@ -1,0 +1,200 @@
+"""KV-cache storage quantization: per-row codes + bfloat16 scales.
+
+The serving engines store K/V in a fixed cache and re-read the whole
+prefix every decode tick, so the cache dominates serving memory.  This
+module defines the *storage* formats of that cache (``ServeConfig.kv_fmt``)
+and the pure-jnp reference implementations of the two dispatched ops:
+
+``kv_quant``    quantize a written K/V row ``(..., head_dim)`` into
+                ``(codes, scales)`` with one scale per (token, kv-head) row,
+``decode_attn`` one-token GQA attention over the quantized cache with
+                dequantization folded into the QK and PV contractions.
+
+Formats (``repro.config.KV_CACHE_FORMATS``):
+
+``none``      identity — the cache keeps the model's compute dtype and no
+              scales are stored.  The ref impl is bit-identical to the
+              plain-jnp ``models.transformer.decode_attend`` math.
+``int8``      symmetric round-to-nearest to [-127, 127] with per-row scale
+              ``bf16(amax / 127)`` — 4x smaller rows (f32 cache) plus two
+              scale bytes per row.
+``luq_fp4``   the LUQ 4-bit grid {0} ∪ {±2^-k, k = 0..6} scaled by the
+              per-row amax, *deterministic* nearest-level rounding (cache
+              storage wants reproducible read-back, not the unbiasedness
+              the training quantizers get from stochastic rounding), two
+              codes packed per uint8 along head_dim (even index = low
+              nibble) — 8x smaller rows.
+
+Scales are stored in **bfloat16** and the quantizers divide by the
+bf16-rounded scale (not the exact amax), so dequantization uses exactly
+the stored scale — a cache round-trip is deterministic and identical on
+every backend, which is what makes engine-vs-oneshot token equivalence
+hold per format (docs/SERVING.md "Equivalence contract").
+
+The elementwise encode/decode helpers here are shared with the fused
+Pallas kernels (``repro.kernels.decode_attn``) so the two backends cannot
+drift numerically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import KV_CACHE_FORMATS
+
+SCALE_DTYPE = jnp.bfloat16
+INT8_QMAX = 127.0
+# luq_fp4 magnitude grid: code m in 1..7 decodes to 2^(m-7), m = 0 to 0.
+FP4_LEVELS = 7
+
+
+def code_spec(fmt: str, head_dim: int):
+    """``(code_dtype, code_dim)`` of one cached row; dtype None = native.
+
+    ``code_dim`` is the stored last-axis width: ``head_dim`` for int8,
+    ``head_dim // 2`` for the nibble-packed luq_fp4 codes.
+    """
+    if fmt == "none":
+        return None, head_dim
+    if fmt == "int8":
+        return jnp.int8, head_dim
+    if fmt == "luq_fp4":
+        if head_dim % 2:
+            raise ValueError(
+                f"kv_fmt='luq_fp4' packs two codes per byte along head_dim "
+                f"and needs an even head_dim, got {head_dim}")
+        return jnp.uint8, head_dim // 2
+    raise ValueError(f"unknown kv cache format {fmt!r} "
+                     f"(expected one of {KV_CACHE_FORMATS})")
+
+
+# --------------------------------------------------------------------------- #
+# elementwise encode/decode math (shared by the ref impls and the Pallas
+# kernels — single source of truth so backends cannot drift)
+# --------------------------------------------------------------------------- #
+def int8_row_scale(amax: jax.Array) -> jax.Array:
+    """Per-row scale, f32 value of the *stored* bf16 scale."""
+    return (amax / INT8_QMAX).astype(SCALE_DTYPE).astype(jnp.float32)
+
+
+def int8_encode(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Round-to-nearest int8 codes (f32 domain); ``scale`` broadcasts on
+    the last axis.  A zero scale (all-zero row) encodes to zero codes."""
+    safe = jnp.where(scale > 0, scale, 1.0)
+    return jnp.clip(jnp.round(x / safe[..., None]), -INT8_QMAX, INT8_QMAX)
+
+
+def fp4_row_scale(amax: jax.Array) -> jax.Array:
+    """luq_fp4 per-row scale = bf16(amax) (the grid's top level is 1.0)."""
+    return amax.astype(SCALE_DTYPE).astype(jnp.float32)
+
+
+def fp4_encode(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Nearest-level luq_fp4 codes 0..15 (f32 domain): sign bit 3, magnitude
+    m in bits 0..2 decoding to ``2^(m-7)`` (m = 0 decodes to exactly 0)."""
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = jnp.abs(x) / safe[..., None]
+    # nearest grid level in linear distance: floor-log bin, then pick the
+    # closer of its two endpoints (ties go up, matching jnp.round's bias
+    # direction for the int8 path)
+    k = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(y, 2.0 ** -FP4_LEVELS))),
+                 -float(FP4_LEVELS - 1), 0.0)
+    low = jnp.exp2(k)
+    high = jnp.minimum(2.0 * low, 1.0)
+    m = k + 7.0 + ((y - low) >= (high - y)).astype(jnp.float32)
+    # underflow: below half the smallest level, round to exactly zero
+    m = jnp.where(y < 2.0 ** -FP4_LEVELS, 0.0, jnp.clip(m, 1.0, 7.0))
+    return m + 8.0 * ((x < 0) & (m > 0)).astype(jnp.float32)
+
+
+def fp4_decode_unit(codes: jax.Array) -> jax.Array:
+    """Unpacked integer codes 0..15 -> f32 grid values in [-1, 1]."""
+    m = (codes & 7).astype(jnp.float32)
+    sgn = 1.0 - 2.0 * ((codes >> 3) & 1).astype(jnp.float32)
+    return jnp.where(m > 0, jnp.exp2(m - 7.0), 0.0) * sgn
+
+
+def fp4_pack(codes: jax.Array) -> jax.Array:
+    """Pack (..., head_dim) uint8 codes two per byte; even index = low
+    nibble."""
+    lo = codes[..., 0::2].astype(jnp.uint8)
+    hi = codes[..., 1::2].astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def fp4_unpack(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`fp4_pack`: (..., D/2) uint8 -> (..., D) int32."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+# --------------------------------------------------------------------------- #
+# ref impls of the dispatched ops
+# --------------------------------------------------------------------------- #
+def kv_quant(fmt: str, x: jax.Array):
+    """Quantize K/V rows ``(..., head_dim)`` -> ``(codes, scales)``.
+
+    ``scales`` is ``(...,)`` bfloat16, one per row; ``fmt == "none"``
+    returns ``(x, None)`` unchanged.  Deterministic (no RNG key): cache
+    writes must read back identically wherever and whenever they happen.
+    """
+    if fmt == "none":
+        return x, None
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    if fmt == "int8":
+        scale = int8_row_scale(amax)
+        codes = int8_encode(xf, scale).astype(jnp.int8)
+    elif fmt == "luq_fp4":
+        scale = fp4_row_scale(amax)
+        codes = fp4_pack(fp4_encode(xf, scale).astype(jnp.uint8))
+    else:
+        raise ValueError(f"unknown kv cache format {fmt!r}")
+    return codes, scale.astype(SCALE_DTYPE)
+
+
+def kv_dequant(fmt: str, codes: jax.Array, scales) -> jax.Array:
+    """Decode stored rows back to f32 (identity for ``"none"``).
+
+    A zero scale decodes the whole row to exactly zero regardless of the
+    stored codes — which is why the engine zeroes a retired slot's scale
+    rows instead of its (much larger) code rows.
+    """
+    if fmt == "none":
+        return codes
+    s = scales.astype(jnp.float32)[..., None]
+    if fmt == "int8":
+        return codes.astype(jnp.float32) * s
+    if fmt == "luq_fp4":
+        return fp4_decode_unit(fp4_unpack(codes)) * s
+    raise ValueError(f"unknown kv cache format {fmt!r}")
+
+
+def ref_decode_attn(fmt: str, q, k_codes, v_codes, k_scale, v_scale, pos, *,
+                    n_kv: int, scale: float):
+    """One-token GQA attention over the (quantized) cache — the reference.
+
+    ``q``: (B, H, hd); ``k_codes``/``v_codes``: (B, KV, S, code_dim) stored
+    rows; ``k_scale``/``v_scale``: (B, KV, S) bf16 (None for ``"none"``);
+    ``pos``: scalar or (B,) per-row positions; ``scale``: the attention
+    softmax scale (1/sqrt(head_dim)).  Returns (B, H, hd).
+
+    For ``fmt == "none"`` this is operation-for-operation the historical
+    ``models.transformer.decode_attend`` math (bit-identical); quantized
+    formats dequantize the cache and run the same contraction.
+    """
+    B, hp, hd = q.shape
+    g = hp // n_kv
+    qg = q.reshape(B, n_kv, g, hd)
+    k = kv_dequant(fmt, k_codes, k_scale)
+    v = kv_dequant(fmt, v_codes, v_scale)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    valid = (jnp.arange(k.shape[2])[None, None, None, :]
+             <= pos_b[:, None, None, None])
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgs,bksd->bkgd", probs.astype(v.dtype), v)
+    return ctx.reshape(B, hp, hd)

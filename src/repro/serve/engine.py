@@ -22,6 +22,25 @@ logits row through the quantizer-backend dispatcher
 pallas`` serves under continuous batching and a single greedy request
 reproduces the oneshot tokens bit-for-bit.
 
+Quantized KV cache (``ServeConfig.kv_fmt``): with ``int8`` / ``luq_fp4``
+the slot pool stores code arrays plus per-(slot, token, kv-head) bf16
+scales; prefill and decode write rows through the dispatched ``kv_quant``
+op and attention runs through the dispatched ``decode_attn`` op (fused
+dequant on the pallas backend).  Quantization is deterministic (no RNG),
+so the engine stays token-identical to the oneshot driver at the same
+``kv_fmt``.  On retirement the engine zeroes the slot's scale rows: zero
+scale dequantizes every code to exactly 0, so a refilled slot can never
+read a predecessor's rows against stale scales even before its own
+writes land.
+
+Prefill bucketing: admission pads each prompt to the next power of two
+(clamped to ``max_seq``) and passes the true length as a *traced* scalar,
+so the engine compiles at most ``ceil(log2(max_seq))`` prefill programs
+instead of one per distinct prompt length.  Padding is
+semantics-preserving: causal attention hides the pad from real rows, and
+cache rows at index >= pos are masked until a decode tick overwrites
+them (``prefill_programs`` exposes the jit cache size for tests).
+
 Sampling key schedule (docs/SERVING.md): every sampled token uses
 ``fold_in(fold_in(fold_in(PRNGKey(seed), SAMPLE_FOLD), request_id),
 position)`` — domain-separated from the quantizer streams by SAMPLE_FOLD,
@@ -50,6 +69,18 @@ from repro.serve.slots import SlotPool, init_slot_cache
 # head folds 2*pos(+1) off PRNGKey(17), so a dedicated large fold off the
 # *user* seed keeps the sampling stream disjoint from both.
 SAMPLE_FOLD = 0x53A7
+
+
+def prefill_bucket(prompt_len: int, max_seq: int) -> int:
+    """Padded prefill length: next power of two, clamped to ``max_seq``.
+
+    The floor of 2 merges the length-1 bucket into length-2, so the
+    bucket set is {2, 4, ..., 2^ceil(log2(max_seq))} clamped — at most
+    ``ceil(log2(max_seq))`` distinct prefill programs.
+    """
+    if prompt_len < 1 or prompt_len > max_seq:
+        raise ValueError(f"prompt_len={prompt_len} outside [1, {max_seq}]")
+    return min(max(2, 1 << (prompt_len - 1).bit_length()), max_seq)
 
 
 def sampling_key(base_key: jax.Array, request_id, position) -> jax.Array:
@@ -122,6 +153,10 @@ class ContinuousEngine:
             raise ValueError(
                 f"continuous batching supports token-only prompts; family "
                 f"{model.config.family!r} also requires {sorted(extra)}")
+        if serve.kv_fmt not in model.kv_formats:
+            raise ValueError(
+                f"model family {model.config.family!r} does not support "
+                f"kv_fmt={serve.kv_fmt!r} (supported: {model.kv_formats})")
         self.model = model
         self.params = params
         self.serve = serve
@@ -140,17 +175,23 @@ class ContinuousEngine:
         """Build the jitted prefill / cache-write / decode / sample fns."""
         model, resolver = self.model, self._resolver
         temperature, base_key = self.serve.temperature, self._base_key
+        kv_fmt = self.serve.kv_fmt
+        kv_kw = {} if kv_fmt == "none" else {"kv_fmt": kv_fmt}
 
-        def prefill_fn(params, batch):
+        def prefill_fn(params, batch, prompt_len):
+            # prompt_len is a traced scalar: the token batch is padded to a
+            # power-of-two bucket (prefill_bucket), so the compiled program
+            # depends only on the bucket, never on the exact prompt length
             with partitioning_context(resolver):
-                return model.prefill(params, batch)
+                return model.prefill(params, batch, prompt_len=prompt_len,
+                                     **kv_kw)
 
         def step_fn(params, cache, tokens, active, rids):
             # fused decode + sample: one dispatch and one (K,) device->host
             # transfer per tick (the (K, V) logits never leave the device)
             with partitioning_context(resolver):
                 logits, cache = model.decode_slots(params, cache, tokens,
-                                                   active)
+                                                   active, **kv_kw)
             pos = cache["pos"]
             if temperature > 0:
                 keys = jax.vmap(
@@ -161,19 +202,52 @@ class ContinuousEngine:
                 toks = jnp.argmax(logits, -1)
             return toks.astype(jnp.int32), cache
 
-        def write_fn(cache, kc, vc, slot, prompt_len):
-            k = jax.lax.dynamic_update_slice(
-                cache["k"], kc.astype(cache["k"].dtype), (0, slot, 0, 0, 0))
-            v = jax.lax.dynamic_update_slice(
-                cache["v"], vc.astype(cache["v"].dtype), (0, slot, 0, 0, 0))
-            pos = cache["pos"].at[slot].set(prompt_len)
-            return {"k": k, "v": v, "pos": pos}
+        def write_fn(cache, pcache, slot):
+            # copy every prefill cache array (codes and, when quantized,
+            # scales) into the slot's rows; the prefill batch axis is 1 and
+            # its seq extent is the bucket length <= max_seq, so one
+            # dynamic_update_slice per array covers every layout
+            out = {}
+            for name, arr in cache.items():
+                if name == "pos":
+                    out[name] = arr.at[slot].set(pcache["pos"])
+                    continue
+                upd = pcache[name].astype(arr.dtype)
+                start = (0, slot) + (0,) * (arr.ndim - 2)
+                out[name] = jax.lax.dynamic_update_slice(arr, upd, start)
+            return out
 
-        # prefill retraces per distinct prompt length (static shapes);
-        # step/write compile once for the slot geometry
+        def release_fn(cache, slot):
+            # zero the retiring slot's scale rows: zero scale dequantizes
+            # every code to exactly 0, so the next occupant can never read
+            # the predecessor's rows against stale scales (the codes
+            # themselves are harmless without their scales and are masked
+            # by pos regardless)
+            out = dict(cache)
+            for name in ("k_scale", "v_scale"):
+                arr = cache[name]
+                zeros = jnp.zeros((arr.shape[0], 1) + arr.shape[2:],
+                                  arr.dtype)
+                out[name] = jax.lax.dynamic_update_slice(
+                    arr, zeros, (0, slot) + (0,) * (arr.ndim - 2))
+            return out
+
+        # prefill compiles once per power-of-two bucket (prefill_bucket);
+        # step/write/release compile once for the slot geometry
         self._prefill = jax.jit(prefill_fn)
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self._write = jax.jit(write_fn, donate_argnums=(0,))
+        self._release_scales = (jax.jit(release_fn, donate_argnums=(0,))
+                                if kv_fmt != "none" else None)
+
+    @property
+    def prefill_programs(self) -> int:
+        """Number of distinct prefill programs compiled so far.
+
+        Bounded by ``ceil(log2(max_seq))`` for any mix of prompt lengths —
+        the bucketing invariant tests assert against.
+        """
+        return self._prefill._cache_size()
 
     # ------------------------------------------------------------------ #
     # public API
@@ -187,7 +261,8 @@ class ContinuousEngine:
         """
         K = self.serve.max_slots
         self._next_id = 0
-        self.cache = init_slot_cache(self.model, K, self.serve.max_seq)
+        self.cache = init_slot_cache(self.model, K, self.serve.max_seq,
+                                     kv_fmt=self.serve.kv_fmt)
         self.pool = SlotPool(K)
         self.metrics = ServeMetrics()
         self.queue: collections.deque = collections.deque()
@@ -281,16 +356,24 @@ class ContinuousEngine:
     # scheduler internals
     # ------------------------------------------------------------------ #
     def _admit(self, now_fn):
-        """FCFS admission: fill free slots with arrived requests."""
+        """FCFS admission: fill free slots with arrived requests.
+
+        Prompts are zero-padded to their power-of-two bucket
+        (``prefill_bucket``) before prefill, with the true length passed
+        as a traced scalar — one compiled prefill program per bucket.
+        """
         while (self.queue and self.pool.n_free
                and self.queue[0].arrival_time <= now_fn()):
             req = self.queue.popleft()
             slot = self.pool.acquire(req.request_id, req.prompt.size,
                                      req.max_new_tokens)
+            bucket = prefill_bucket(req.prompt.size, self.serve.max_seq)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :req.prompt.size] = req.prompt
             logits, pcache = self._prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
-            self.cache = self._write(self.cache, pcache["k"], pcache["v"],
-                                     slot, req.prompt.size)
+                self.params, {"tokens": jnp.asarray(padded)},
+                req.prompt.size)
+            self.cache = self._write(self.cache, pcache, slot)
             # first generated token, drawn at position == prompt_len
             if self.serve.temperature > 0:
                 key = sampling_key(self._base_key, req.request_id,
@@ -355,6 +438,10 @@ class ContinuousEngine:
             self._dirty = True
         self._active[slot] = False
         self.pool.release(slot)
+        if self._release_scales is not None:
+            # quantized cache: invalidate the slot's scale rows so the next
+            # occupant can never dequantize this occupant's leftovers
+            self.cache = self._release_scales(self.cache, slot)
         self._live.pop(req.request_id, None)
         toks = np.asarray(self._tokens_by_req[req.request_id], np.int32)
         self.metrics.on_complete(req.request_id, now,

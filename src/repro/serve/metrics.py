@@ -80,6 +80,23 @@ class ServeMetrics:
     def _done(self) -> List[RequestTiming]:
         return [t for t in self.timings.values() if t.completed is not None]
 
+    def per_request(self) -> List[dict]:
+        """Per-request timing rows (completed requests, by request id).
+
+        One dict per request with its TTFT / latency / queue wait in
+        seconds — the raw rows behind ``summary()``'s percentiles, which
+        benchmarks embed in their JSON so regressions are attributable to
+        specific requests rather than buried in an aggregate.
+        """
+        return [{
+            "request_id": t.request_id,
+            "prompt_len": t.prompt_len,
+            "n_generated": t.n_generated,
+            "ttft_s": t.ttft,
+            "latency_s": t.latency,
+            "queue_wait_s": t.queue_wait,
+        } for t in sorted(self._done(), key=lambda t: t.request_id)]
+
     def summary(self) -> dict:
         """Aggregate throughput and latency percentiles for completed work.
 

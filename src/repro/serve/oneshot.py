@@ -28,10 +28,16 @@ import numpy as np
 from repro.launch.steps import build_serve_setup
 
 
-def build_oneshot_fns(model, run, mesh, batch: int,
-                      cache_len: int) -> Tuple:
-    """Jit the (prefill, decode) pair for a fixed batch/cache geometry."""
-    setup = build_serve_setup(model, run, mesh, batch, cache_len)
+def build_oneshot_fns(model, run, mesh, batch: int, cache_len: int,
+                      kv_fmt: str = "none") -> Tuple:
+    """Jit the (prefill, decode) pair for a fixed batch/cache geometry.
+
+    ``kv_fmt`` selects the KV-cache storage format (quantized caches use
+    the same deterministic per-row quantization as the continuous engine,
+    so the two stay token-identical at matching formats).
+    """
+    setup = build_serve_setup(model, run, mesh, batch, cache_len,
+                              kv_fmt=kv_fmt)
     return jax.jit(setup.prefill_fn), jax.jit(setup.decode_fn)
 
 

@@ -88,20 +88,30 @@ class SlotPool:
         return state
 
 
-def init_slot_cache(model, n_slots: int, max_seq: int):
+def init_slot_cache(model, n_slots: int, max_seq: int,
+                    kv_fmt: str = "none"):
     """Materialize the zero-filled slot cache pytree for ``model``.
 
     Shapes come from the model's ``slot_cache_spec`` hook (for the dense
     transformer: k/v of shape (L, n_slots, KV, max_seq, hd) plus a
-    (n_slots,) int32 position vector).  Zero initialization matters: masked
-    attention over a zero-padded cache is bit-identical to attention over a
-    shorter cache, which is what makes the engine equivalent to the oneshot
-    driver (docs/SERVING.md).
+    (n_slots,) int32 position vector; quantized ``kv_fmt`` swaps k/v for
+    code arrays and adds per-(slot, token, kv-head) scale arrays).  Zero
+    initialization matters twice over: masked attention over a zero-padded
+    cache is bit-identical to attention over a shorter cache, and for
+    quantized formats a ZERO SCALE dequantizes every code to exactly 0 —
+    the same invariant ``ContinuousEngine._retire`` restores when a slot
+    is released, so a refilled slot can never dequantize a predecessor's
+    rows against stale scales (docs/SERVING.md).
     """
     if model.slot_cache_spec is None:
         raise ValueError(
             f"model family {model.config.family!r} does not implement "
             "slot-pool decoding (decode_slots/slot_cache_spec)")
-    spec = model.slot_cache_spec(n_slots, max_seq)
+    if kv_fmt not in model.kv_formats:
+        raise ValueError(
+            f"model family {model.config.family!r} does not support "
+            f"kv_fmt={kv_fmt!r} (supported: {model.kv_formats})")
+    kw = {} if kv_fmt == "none" else {"kv_fmt": kv_fmt}
+    spec = model.slot_cache_spec(n_slots, max_seq, **kw)
     return {name: jnp.zeros(sds.shape, sds.dtype)
             for name, sds in spec.items()}

@@ -1,0 +1,205 @@
+"""KV-cache storage quantization: kv_quant / decode_attn op parity
+(ref vs pallas), the bf16-scale determinism contract, the zero-scale
+invalidation invariant, and the dispatch registry rows (docs/SERVING.md,
+docs/QUANTIZATION.md)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import KV_CACHE_FORMATS
+from repro.quant import backend as qb
+from repro.quant import kv_cache as kvc
+
+QUANT_FMTS = ("int8", "luq_fp4")
+
+
+def rows(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape,
+                                     jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# kv_quant: ref vs pallas parity (bit-exact — shared elementwise math)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("fmt", QUANT_FMTS)
+@pytest.mark.parametrize("shape", [
+    (2, 3, 16, 32),     # typical (B, KV, S, hd)
+    (5, 12),            # head_dim not a multiple of the 128 lane tile
+    (3, 7, 10),         # row count not a multiple of the row block either
+])
+def test_kv_quant_ref_pallas_bitwise(fmt, shape, monkeypatch):
+    """Codes AND scales must match bit-for-bit across backends: both
+    divide by the bf16-rounded scale, so parity is a padding/layout
+    question, not a rounding question.  REPRO_QUANT_BACKEND is cleared so
+    the ref side stays ref even on the CI pallas leg."""
+    monkeypatch.delenv(qb.ENV_VAR, raising=False)
+    x = rows(0, shape)
+    ref_impl, be_r = qb.get_kv_quant(fmt, "ref")
+    pal_impl, be_p = qb.get_kv_quant(fmt, "pallas")
+    assert (be_r, be_p) == ("ref", "pallas")
+    cr, sr = ref_impl(x)
+    cp, sp = pal_impl(x)
+    assert cr.dtype == cp.dtype and sr.dtype == sp.dtype == kvc.SCALE_DTYPE
+    np.testing.assert_array_equal(np.asarray(cr), np.asarray(cp))
+    np.testing.assert_array_equal(np.asarray(sr, np.float32),
+                                  np.asarray(sp, np.float32))
+
+
+@pytest.mark.parametrize("fmt", QUANT_FMTS)
+def test_kv_quant_roundtrip_error_bounded(fmt):
+    """Dequantized rows stay within one quantization step of the input
+    (int8: scale/2 per element; luq_fp4: coarse log grid, bounded by a
+    fraction of the row amax)."""
+    x = rows(1, (4, 6, 32), scale=3.0)
+    codes, scales = kvc.kv_quant(fmt, x)
+    deq = kvc.kv_dequant(fmt, codes, scales)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    amax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    # bf16 scale rounding adds <= 2^-8 relative slack on top of the step
+    if fmt == "int8":
+        bound = amax * (0.5 / kvc.INT8_QMAX) * 1.02
+    else:
+        # nearest-level on the {0} U {2^-k} grid: worst case is half the
+        # gap between the two largest levels, amax * (1 - 0.5)/... = amax/3
+        # at the top octave boundary; use the safe analytic bound amax/3
+        bound = amax / 3.0 * 1.02
+    assert (err <= bound + 1e-7).all()
+
+
+@pytest.mark.parametrize("fmt", QUANT_FMTS)
+def test_kv_quant_deterministic_and_bf16_scales(fmt):
+    """Quantization takes no RNG key: identical inputs produce identical
+    codes/scales, and stored scales are exactly representable in bf16 —
+    the two halves of the engine-vs-oneshot equivalence contract."""
+    x = rows(2, (3, 5, 16))
+    c1, s1 = kvc.kv_quant(fmt, x)
+    c2, s2 = kvc.kv_quant(fmt, x)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(s1, np.float32),
+                                  np.asarray(s2, np.float32))
+    s32 = np.asarray(s1, np.float32)
+    np.testing.assert_array_equal(
+        s32, np.asarray(jnp.asarray(s32).astype(kvc.SCALE_DTYPE),
+                        np.float32))
+
+
+def test_fp4_odd_head_dim_rejected():
+    """luq_fp4 packs two codes per byte along head_dim, so an odd head_dim
+    must fail loudly at spec time, not corrupt the cache silently."""
+    with pytest.raises(ValueError, match="even head_dim"):
+        kvc.code_spec("luq_fp4", 7)
+
+
+def test_zero_scale_rows_dequantize_to_exactly_zero():
+    """A zero scale decodes any stored codes to exactly 0 — the invariant
+    behind SlotPool release hardening: the engine zeroes a retired slot's
+    scale rows so a refilled slot cannot read the predecessor's rows."""
+    for fmt in QUANT_FMTS:
+        _, code_dim = kvc.code_spec(fmt, 16)
+        dt = jnp.int8 if fmt == "int8" else jnp.uint8
+        codes = jnp.full((2, 3, code_dim), 0x55, dt)   # arbitrary garbage
+        scales = jnp.zeros((2, 3), kvc.SCALE_DTYPE)
+        deq = np.asarray(kvc.kv_dequant(fmt, codes, scales))
+        assert (deq == 0.0).all()
+
+
+# --------------------------------------------------------------------------- #
+# decode_attn: ref vs pallas parity (fp32 tolerance — the kernel folds the
+# scales into the score matrix post-matmul, reassociating the products)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("fmt", QUANT_FMTS)
+@pytest.mark.parametrize("geom", [
+    # (B, KV, group, head_dim, S): both tile-aligned and ragged shapes —
+    # head_dim 12 is not a multiple of any lane tile (fp4 packs it to 6
+    # bytes), S=10 is not a sublane multiple
+    (2, 2, 4, 32, 16),
+    (3, 2, 3, 12, 10),
+])
+def test_decode_attn_ref_pallas_parity(fmt, geom, monkeypatch):
+    monkeypatch.delenv(qb.ENV_VAR, raising=False)
+    B, n_kv, g, hd, S = geom
+    q = rows(3, (B, n_kv * g, hd))
+    k = rows(4, (B, n_kv, S, hd))
+    v = rows(5, (B, n_kv, S, hd))
+    kc, ks = kvc.kv_quant(fmt, k)
+    vc, vs = kvc.kv_quant(fmt, v)
+    pos = jnp.asarray([S - 1, 2, 0][:B], jnp.int32)     # mixed per-slot
+    ref_impl, _ = qb.get_decode_attn(fmt, "ref")
+    pal_impl, be = qb.get_decode_attn(fmt, "pallas")
+    assert be == "pallas"
+    scale = 1.0 / np.sqrt(hd)
+    a = ref_impl(q, kc, vc, ks, vs, pos, n_kv=n_kv, scale=scale)
+    b = pal_impl(q, kc, vc, ks, vs, pos, n_kv=n_kv, scale=scale)
+    assert a.shape == b.shape == (B, n_kv * g, hd)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_decode_attn_none_matches_historical_decode_attend():
+    """The ``none`` ref impl must be bit-identical to the plain-jnp
+    attention the serve path always ran (scores -> mask -> softmax -> PV
+    in the same order with the same dtypes)."""
+    B, n_kv, g, hd, S = 2, 2, 2, 8, 6
+    q = rows(6, (B, n_kv * g, hd))
+    k = rows(7, (B, n_kv, S, hd))
+    v = rows(8, (B, n_kv, S, hd))
+    pos = jnp.asarray([S - 1, 3], jnp.int32)
+    scale = 1.0 / np.sqrt(hd)
+    out = kvc.ref_decode_attn("none", q, k, v, None, None, pos,
+                              n_kv=n_kv, scale=scale)
+    # the historical decode_attend expression, inlined
+    qg = q.reshape(B, n_kv, g, hd)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, None, None, :] <= pos[:, None, None, None]
+    probs = jax.nn.softmax(jnp.where(valid, scores, -1e30), axis=-1)
+    legacy = jnp.einsum("bkgs,bksd->bkgd", probs.astype(v.dtype),
+                        v).reshape(B, n_kv * g, hd)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(legacy))
+
+
+def test_decode_attn_masks_stale_rows_beyond_pos(monkeypatch):
+    """Rows past a slot's position must contribute exactly zero weight —
+    overwriting them with garbage (a reused slot before its decode writes
+    land) cannot change the output."""
+    monkeypatch.delenv(qb.ENV_VAR, raising=False)
+    B, n_kv, g, hd, S = 1, 1, 2, 16, 8
+    q = rows(9, (B, n_kv * g, hd))
+    k = rows(10, (B, n_kv, S, hd))
+    v = rows(11, (B, n_kv, S, hd))
+    pos = jnp.asarray([3], jnp.int32)
+    for fmt in QUANT_FMTS:
+        kc, ks = kvc.kv_quant(fmt, k)
+        vc, vs = kvc.kv_quant(fmt, v)
+        # poison every row beyond pos with huge garbage
+        k_bad = k.at[:, :, 4:].set(1e4)
+        v_bad = v.at[:, :, 4:].set(-1e4)
+        kcb, ksb = kvc.kv_quant(fmt, k_bad)
+        vcb, vsb = kvc.kv_quant(fmt, v_bad)
+        for backend in ("ref", "pallas"):
+            impl, _ = qb.get_decode_attn(fmt, backend)
+            clean = impl(q, kc, vc, ks, vs, pos, n_kv=n_kv, scale=0.25)
+            dirty = impl(q, kcb, vcb, ksb, vsb, pos, n_kv=n_kv, scale=0.25)
+            np.testing.assert_array_equal(np.asarray(clean),
+                                          np.asarray(dirty))
+
+
+# --------------------------------------------------------------------------- #
+# dispatch registry
+# --------------------------------------------------------------------------- #
+def test_none_falls_back_to_ref_explicitly(monkeypatch):
+    """There is no pallas kernel for ``none`` (nothing to dequantize); a
+    pallas request must resolve to ref and SAY so."""
+    monkeypatch.delenv(qb.ENV_VAR, raising=False)
+    for getter in (qb.get_kv_quant, qb.get_decode_attn):
+        _, be = getter("none", "pallas")
+        assert be == "ref"
+
+
+def test_capability_table_rows():
+    """The registry rows the docs table is synced against."""
+    table = qb.capability_table()
+    for op in ("kv_quant", "decode_attn"):
+        assert table[op]["ref"] == tuple(sorted(KV_CACHE_FORMATS))
+        assert table[op]["pallas"] == ("int8", "luq_fp4")

@@ -1,5 +1,9 @@
 """Continuous-batching engine: oneshot equivalence, slot lifecycle,
-quantized decode, and the sampling-key schedule (docs/SERVING.md)."""
+quantized decode, the quantized slot-pool KV cache, prefill bucketing,
+and the sampling-key schedule (docs/SERVING.md)."""
+import dataclasses
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,12 +38,12 @@ def prompt_of(seed, length):
                                          (length,), 0, VOCAB), np.int32)
 
 
-def oneshot_reference(model, params, prompt, gen):
+def oneshot_reference(model, params, prompt, gen, kv_fmt="none"):
     """Tokens from the lockstep reference driver for one greedy request."""
     run = RunConfig(model=model.config, quant=model.quant,
                     dp=DPConfig(enabled=False), optim=OptimConfig())
     prefill, decode = build_oneshot_fns(model, run, make_host_mesh(), 1,
-                                        prompt.size + gen)
+                                        prompt.size + gen, kv_fmt=kv_fmt)
     tokens, _ = oneshot_generate(prefill, decode, params,
                                  {"tokens": jnp.asarray(prompt)[None, :]},
                                  gen)
@@ -249,6 +253,100 @@ def test_quantized_continuous_serving_smoke(backend):
         toks = out[rid].tokens
         assert toks.size == 3
         assert ((toks >= 0) & (toks < vpad)).all()
+
+
+# --------------------------------------------------------------------------- #
+# quantized slot-pool KV cache (ServeConfig.kv_fmt)
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+@pytest.mark.parametrize("kv_fmt", ["int8", "luq_fp4"])
+def test_engine_matches_oneshot_per_kv_fmt(kv_fmt):
+    """With a quantized slot-pool cache the engine must stay token-identical
+    to the oneshot driver at the same kv_fmt: quantization is deterministic
+    (round-to-nearest against a bf16 scale, no RNG), so both drivers write
+    and read bit-identical rows regardless of batching order."""
+    model, params = make_model()
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=2, max_seq=24,
+                                          kv_fmt=kv_fmt))
+    specs = [(3, 6), (9, 3), (5, 2), (4, 7)]       # (prompt_len, gen)
+    rids = [engine.submit(prompt_of(50 + i, pl), max_new_tokens=g)
+            for i, (pl, g) in enumerate(specs)]
+    out = engine.run()
+    for i, (rid, (pl, g)) in enumerate(zip(rids, specs)):
+        ref = oneshot_reference(model, params, prompt_of(50 + i, pl), g,
+                                kv_fmt=kv_fmt)
+        assert out[rid].tokens.tolist() == ref, (kv_fmt, i)
+
+
+def test_release_zeroes_scale_rows_and_slot_reuse_is_clean():
+    """Retiring a slot must zero its scale rows (zero scale dequantizes any
+    stored codes to exactly 0), and a request decoded in a *reused* slot
+    must produce the same tokens as the same request in a fresh engine —
+    the regression for stale-scale leakage across slot generations."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=1, max_seq=16, kv_fmt="int8")
+    engine = ContinuousEngine(model, params, serve)
+    a = engine.submit(prompt_of(60, 5), max_new_tokens=4)
+    b = engine.submit(prompt_of(61, 7), max_new_tokens=3)   # reuses slot 0
+    out = engine.run()
+    reused = out[b].tokens.tolist()
+    # every request retired -> every slot's scale rows are zeroed again
+    for name in ("k_scale", "v_scale"):
+        assert name in engine.cache
+        assert (np.asarray(engine.cache[name]) == 0.0).all()
+    assert out[a].tokens.size == 4
+    # same request, fresh slot generation: must match the reused-slot run
+    engine.reset()
+    b2 = engine.submit(prompt_of(61, 7), max_new_tokens=3)
+    assert engine.run()[b2].tokens.tolist() == reused
+
+
+def test_unquantized_cache_has_no_scale_arrays():
+    """kv_fmt="none" keeps the original cache pytree (k, v, pos only) so
+    the unquantized path pays zero memory or dispatch overhead."""
+    model, params = make_model()
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=1, max_seq=8))
+    assert sorted(engine.cache) == ["k", "pos", "v"]
+    assert engine._release_scales is None
+
+
+def test_engine_rejects_unsupported_kv_fmt():
+    """ServeConfig validates against the global format list; the engine
+    additionally validates against the *model family's* advertised
+    kv_formats so unsupported combinations fail at construction."""
+    with pytest.raises(ValueError, match="kv_fmt"):
+        ServeConfig(kv_fmt="int4")                 # not a known format
+    model, params = make_model()
+    limited = dataclasses.replace(model, kv_formats=("none",))
+    with pytest.raises(ValueError, match="does not support"):
+        ContinuousEngine(limited, params,
+                         ServeConfig(max_slots=1, max_seq=8, kv_fmt="int8"))
+
+
+# --------------------------------------------------------------------------- #
+# prefill bucketing (pow2 jit-cache bound)
+# --------------------------------------------------------------------------- #
+def test_prefill_bucketing_bounds_jit_cache():
+    """Admission pads prompts to the next power of two, so a trace with
+    many distinct prompt lengths compiles at most log2(max_seq) prefill
+    programs instead of one per length."""
+    model, params = make_model()
+    max_seq = 32
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=2, max_seq=max_seq))
+    lengths = [1, 2, 3, 5, 6, 9, 13, 17, 26]       # 9 distinct lengths
+    rids = [engine.submit(prompt_of(70 + i, pl), max_new_tokens=2)
+            for i, pl in enumerate(lengths)]
+    out = engine.run()
+    assert sorted(out) == sorted(rids)
+    bound = math.ceil(math.log2(max_seq))
+    assert engine.prefill_programs <= bound        # 5 buckets for these
+    # bucketed (padded) prefill must not change the tokens
+    for rid, pl in zip(rids[:2], lengths[:2]):
+        ref = oneshot_reference(model, params, prompt_of(70 + rids.index(rid), pl), 2)
+        assert out[rid].tokens.tolist() == ref
 
 
 # --------------------------------------------------------------------------- #
