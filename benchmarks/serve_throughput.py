@@ -197,6 +197,15 @@ def measure_continuous(engine, trace) -> dict:
         "ttft_p50_s": s["ttft_p50_s"], "ttft_p99_s": s["ttft_p99_s"],
         "queue_wait_p50_s": s["queue_wait_p50_s"],
         "prefill_programs": engine.prefill_programs,
+        # fault-tolerance counters (docs/SERVING.md "Failure model &
+        # recovery") — all zero on a fault-free bench run, but surfaced so
+        # chaos runs and SLO dashboards read from the same JSON
+        "shed": s["shed"], "retried": s["retried"],
+        "deadline_missed": s["deadline_missed"],
+        "recovered": s["recovered"],
+        "faults_injected": s["faults_injected"],
+        "degraded_events": s["degraded_events"],
+        "n_rejected": s["n_rejected"],
         "per_request": engine.metrics.per_request(),
     }
 

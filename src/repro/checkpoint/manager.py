@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import pickle
 import re
+import shutil
 import threading
 from pathlib import Path
 from typing import Any, Optional, Tuple
@@ -24,6 +25,11 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         self._pending: Optional[threading.Thread] = None
+        # a writer killed mid-save leaves only a step_*.tmp staging dir
+        # (the .ckpt destination appears atomically via os.replace); sweep
+        # such orphans so they never accumulate across restarts
+        for stale in self.dir.glob("step_*.tmp"):
+            shutil.rmtree(stale, ignore_errors=True)
 
     # ------------------------------------------------------------------ #
     def _path(self, step: int) -> Path:
@@ -32,7 +38,7 @@ class CheckpointManager:
     def steps(self):
         out = []
         for p in self.dir.glob("step_*.ckpt"):
-            m = re.match(r"step_(\d+)\.ckpt", p.name)
+            m = re.fullmatch(r"step_(\d+)\.ckpt", p.name)
             if m and (p / "meta.json").exists():
                 out.append(int(m.group(1)))
         return sorted(out)
@@ -63,7 +69,6 @@ class CheckpointManager:
     def _gc(self):
         steps = self.steps()
         for s in steps[: max(0, len(steps) - self.keep)]:
-            import shutil
             shutil.rmtree(self._path(s), ignore_errors=True)
 
     # ------------------------------------------------------------------ #

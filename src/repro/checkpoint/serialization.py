@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 import zlib
 from pathlib import Path
 from typing import Any, Optional, Tuple
@@ -34,21 +35,26 @@ def save(path: str, tree: Any, aux: Optional[dict] = None) -> None:
     path = Path(path)
     tmp = path.with_suffix(".tmp")
     if tmp.exists():
-        import shutil
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
-    leaves, _ = _flatten_with_paths(tree)
-    arrays = {f"a{i}": arr for i, (_, arr) in enumerate(leaves)}
-    np.savez(tmp / "arrays.npz", **arrays)
-    crc = zlib.crc32((tmp / "arrays.npz").read_bytes())
-    meta = {
-        "paths": [p for p, _ in leaves],
-        "crc32": crc,
-        "aux": aux or {},
-    }
-    (tmp / "meta.json").write_text(json.dumps(meta, default=_json_default))
+    try:
+        leaves, _ = _flatten_with_paths(tree)
+        arrays = {f"a{i}": arr for i, (_, arr) in enumerate(leaves)}
+        np.savez(tmp / "arrays.npz", **arrays)
+        crc = zlib.crc32((tmp / "arrays.npz").read_bytes())
+        meta = {
+            "paths": [p for p, _ in leaves],
+            "crc32": crc,
+            "aux": aux or {},
+        }
+        (tmp / "meta.json").write_text(
+            json.dumps(meta, default=_json_default))
+    except BaseException:
+        # a torn write must never leave a half-built tmp dir behind: the
+        # final destination only ever appears via the atomic replace below
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     if path.exists():
-        import shutil
         shutil.rmtree(path)
     os.replace(tmp, path)
 

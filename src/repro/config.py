@@ -222,6 +222,27 @@ class ServeConfig:
     # plus per-(token, kv-head) bfloat16 scales and dequantize inside the
     # decode-attention op (docs/SERVING.md "Quantized cache layout").
     kv_fmt: str = "none"
+    # ---- admission control / fault tolerance (docs/SERVING.md "Failure
+    # model & recovery") ----
+    # Per-request deadline in seconds from arrival (None = no deadline).
+    # An expired queued request is retired without admission ("rejected"
+    # bucket); an expired in-flight request retires with its partial tokens
+    # and status "timed_out".  Overridable per request at submit().
+    deadline_s: Optional[float] = None
+    # Queue bound: submissions beyond this many waiting requests are shed
+    # immediately (status "shed") instead of growing the queue without
+    # bound.  0 = unbounded (the pre-fault-tolerance behavior).
+    max_queue: int = 0
+    # Retry policy for injected/detected faults (prefill dispatch failure,
+    # decode dispatch failure, detected slot-cache poison): a victim is
+    # re-queued up to max_retries times and replayed by re-prefilling
+    # prompt + generated prefix — token-identical because sampling keys
+    # derive from (request_id, position).  Exhausted retries finalize the
+    # request with status "failed" and its partial tokens.
+    max_retries: int = 2
+    # Linear backoff: re-admission of attempt k is gated to
+    # ``now + k * retry_backoff_s``.  0 = immediate re-queue.
+    retry_backoff_s: float = 0.0
 
     def __post_init__(self):
         if self.max_slots < 1:
@@ -232,6 +253,14 @@ class ServeConfig:
             raise ValueError(
                 f"ServeConfig.kv_fmt must be one of {KV_CACHE_FORMATS}, "
                 f"got {self.kv_fmt!r}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("ServeConfig.deadline_s must be > 0 (or None)")
+        if self.max_queue < 0:
+            raise ValueError("ServeConfig.max_queue must be >= 0")
+        if self.max_retries < 0:
+            raise ValueError("ServeConfig.max_retries must be >= 0")
+        if self.retry_backoff_s < 0:
+            raise ValueError("ServeConfig.retry_backoff_s must be >= 0")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,6 +35,8 @@ from repro.config import (DPConfig, OptimConfig, QuantConfig, RunConfig,
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build_model
+from repro.runtime.faults import FaultPlan
+from repro.runtime.supervisor import ServeSupervisor, run_supervised
 from repro.serve import ContinuousEngine, build_oneshot_fns, oneshot_generate
 
 
@@ -77,13 +79,30 @@ def run_oneshot(model, params, mesh, run, args) -> None:
 
 
 def run_continuous(model, params, args) -> None:
-    """Continuous-batching path: slot-pool engine with FCFS admission."""
+    """Continuous-batching path: slot-pool engine with FCFS admission.
+
+    With ``--fault-seed`` the run goes through the supervisor under a
+    seeded ``FaultPlan`` (chaos mode): faults are injected at their
+    scheduled counters, recovery counters are printed, and the fired-event
+    log lands in ``--fault-log`` for inspection.
+    """
     serve = ServeConfig(max_slots=args.slots,
                         max_seq=args.prompt_len + args.gen,
                         max_new_tokens=args.gen,
                         temperature=args.temperature, seed=args.seed,
-                        kv_fmt=args.kv_fmt)
-    engine = ContinuousEngine(model, params, serve)
+                        kv_fmt=args.kv_fmt,
+                        deadline_s=args.deadline,
+                        max_queue=args.max_queue)
+    faults = None
+    if args.fault_seed is not None:
+        faults = FaultPlan.generate(
+            args.fault_seed,
+            kinds=("prefill_fail", "decode_fail", "slot_corrupt",
+                   "clock_freeze"),
+            horizon=max(2, args.gen), n_slots=args.slots)
+    engine = ContinuousEngine(model, params, serve, faults=faults)
+    supervisor = (ServeSupervisor(engine, faults=faults)
+                  if faults is not None else None)
     key = jax.random.PRNGKey(args.seed)
     n_requests = args.requests or args.slots
     for i in range(n_requests):
@@ -91,7 +110,8 @@ def run_continuous(model, params, args) -> None:
                                      args.prompt_len,
                                      model.config.vocab_size),
                       max_new_tokens=args.gen)
-    results = engine.run()
+    results = (run_supervised(engine) if supervisor is not None
+               else engine.run())
     summary = engine.metrics.summary()
     print(f"served {summary['n_requests']} requests / "
           f"{summary['total_new_tokens']} new tokens in "
@@ -101,8 +121,20 @@ def run_continuous(model, params, args) -> None:
     print(f"latency p50/p99: {summary['latency_p50_s']*1e3:.1f}/"
           f"{summary['latency_p99_s']*1e3:.1f} ms; "
           f"ttft p50: {summary['ttft_p50_s']*1e3:.1f} ms")
+    if faults is not None or summary["shed"] or summary["deadline_missed"]:
+        print(f"recovery: {summary['faults_injected']} faults injected, "
+              f"{summary['retried']} retries, {summary['recovered']} "
+              f"recovered, {summary['shed']} shed, "
+              f"{summary['deadline_missed']} deadline-missed, "
+              f"{summary['degraded_events']} degraded events")
+    if faults is not None and args.fault_log:
+        with open(args.fault_log, "w") as f:
+            f.write(faults.log_json(extra={"summary": summary}))
+        print(f"fault log written to {args.fault_log}")
     for rid in sorted(results):
-        print(f"request {rid}: {results[rid].tokens.tolist()}")
+        r = results[rid]
+        tag = "" if r.status == "ok" else f" [{r.status}]"
+        print(f"request {rid}{tag}: {r.tokens.tolist()}")
 
 
 def main(argv=None):
@@ -137,6 +169,18 @@ def main(argv=None):
                          "scales and attend through the dispatched "
                          "decode_attn op (docs/SERVING.md)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="continuous: per-request deadline in seconds from "
+                         "arrival (expired requests retire with partial "
+                         "results, status timed_out)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="continuous: bound on waiting requests; overflow "
+                         "is shed at submit (0 = unbounded)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="continuous: run under a seeded FaultPlan via the "
+                         "supervisor (chaos mode)")
+    ap.add_argument("--fault-log", default=None,
+                    help="chaos mode: write the fired-fault JSON log here")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config(args.arch) if args.smoke

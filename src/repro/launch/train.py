@@ -15,6 +15,8 @@ import argparse
 from repro.config import DPConfig, ModelConfig, OptimConfig, QuantConfig, RunConfig
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.data.synthetic import ImageClassDataset, NLIDataset, TokenDataset
+from repro.runtime.faults import FaultEvent, FaultPlan
+from repro.runtime.preemption import Preempted, PreemptionHandler
 from repro.train_loop import Trainer
 
 
@@ -82,6 +84,13 @@ def main(argv=None):
                     help="lax.scan unroll factor for the scan executor")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--preempt-at", type=int, default=None,
+                    help="inject a preemption at this global step: the "
+                         "trainer writes a mid-epoch checkpoint and exits; "
+                         "a rerun resumes bit-identically")
+    ap.add_argument("--handle-signals", action="store_true",
+                    help="checkpoint-and-exit on SIGTERM (scheduler "
+                         "eviction notice) instead of dying mid-step")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -107,12 +116,30 @@ def main(argv=None):
     ds = make_dataset(cfg, args.dataset_size, args.seq_len, args.seed)
     ev = make_dataset(cfg, 512, args.seq_len, args.seed + 1) \
         if cfg.family in ("resnet", "densenet", "bert") else None
+    handler = None
+    if args.preempt_at is not None or args.handle_signals:
+        plan = (FaultPlan([FaultEvent(kind="preempt", at=args.preempt_at)],
+                          seed=args.seed)
+                if args.preempt_at is not None else None)
+        handler = PreemptionHandler(faults=plan,
+                                    handle_signals=args.handle_signals)
     tr = Trainer(run, ds, eval_dataset=ev, mode=args.mode,
-                 checkpoint_dir=args.checkpoint_dir)
+                 checkpoint_dir=args.checkpoint_dir, preemption=handler)
     resumed = tr.restore_latest()
     if resumed is not None:
-        print(f"resumed from checkpoint at epoch {resumed}")
-    tr.train(args.epochs, eps_budget=args.eps, verbose=True)
+        print(f"resumed from checkpoint at epoch {resumed}"
+              + (" (mid-epoch)" if tr._mid_epoch is not None else ""))
+    # --epochs is the run's *total* epoch count: train whatever is left
+    # past the epoch cursor (a finished run is a clean no-op restart)
+    remaining = max(0, args.epochs - tr._next_epoch)
+    try:
+        tr.train(remaining, eps_budget=args.eps, verbose=True)
+    except Preempted as p:
+        if tr.ckpt:
+            tr.ckpt.wait()
+        print(f"preempted at step {p.step}; checkpoint written — rerun to "
+              "resume")
+        return
     if tr.ckpt:
         tr.ckpt.wait()
     final = tr.history[-1]

@@ -1,6 +1,16 @@
 from repro.runtime.elastic import MeshPlan, degrade_sequence, plan_remesh
+from repro.runtime.faults import (DEFAULT_FREEZE_READS, FAULT_KINDS,
+                                  FaultEvent, FaultInjected, FaultPlan)
 from repro.runtime.heartbeat import FailureDetector, Heartbeat
+from repro.runtime.preemption import Preempted, PreemptionHandler
 from repro.runtime.straggler import StragglerDetector
+from repro.runtime.supervisor import (DegradeToOneshot, ServeSupervisor,
+                                      drain_with_oneshot, run_supervised)
 
 __all__ = ["MeshPlan", "degrade_sequence", "plan_remesh",
-           "FailureDetector", "Heartbeat", "StragglerDetector"]
+           "FailureDetector", "Heartbeat", "StragglerDetector",
+           "DEFAULT_FREEZE_READS", "FAULT_KINDS", "FaultEvent",
+           "FaultInjected", "FaultPlan",
+           "Preempted", "PreemptionHandler",
+           "DegradeToOneshot", "ServeSupervisor", "drain_with_oneshot",
+           "run_supervised"]

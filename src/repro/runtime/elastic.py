@@ -24,15 +24,29 @@ class MeshPlan:
 def plan_remesh(n_chips: int, model_parallel: int,
                 per_replica_batch: int, dataset_size: int,
                 pods: int = 1) -> Optional[MeshPlan]:
-    """Largest (data, model) mesh with the given TP degree that fits
-    ``n_chips``; None if even one replica no longer fits."""
-    if n_chips < model_parallel:
+    """Largest mesh with the given TP degree that fits ``n_chips``.
+
+    ``n_chips`` is the *total* surviving chip count across ``pods``; with
+    ``pods > 1`` the mesh gains a leading pod axis and the data degree is
+    what fits per pod (every pod must host the same sub-mesh), so the
+    shape is ``(pods, data, model)``.  Returns None if even one replica no
+    longer fits.
+    """
+    if pods < 1:
+        raise ValueError(f"pods must be >= 1, got {pods}")
+    data = n_chips // (model_parallel * pods)
+    if data < 1:
         return None
-    data = n_chips // model_parallel
-    global_batch = data * per_replica_batch
+    global_batch = pods * data * per_replica_batch
+    if pods > 1:
+        shape: Tuple[int, ...] = (pods, data, model_parallel)
+        axis_names: Tuple[str, ...] = ("pod", "data", "model")
+    else:
+        shape = (data, model_parallel)
+        axis_names = ("data", "model")
     return MeshPlan(
-        shape=(data, model_parallel),
-        axis_names=("data", "model"),
+        shape=shape,
+        axis_names=axis_names,
         global_batch=global_batch,
         sample_rate=min(1.0, global_batch / dataset_size),
     )

@@ -39,9 +39,13 @@ class FailureDetector:
         for p in self.dir.glob("host_*.hb"):
             try:
                 data = json.loads(p.read_text())
-            except (json.JSONDecodeError, OSError):
+                hid = int(p.stem.split("_", 1)[1])
+            except (json.JSONDecodeError, OSError, ValueError, IndexError):
+                # unreadable payloads and malformed filenames (non-numeric
+                # host ids, stray files matching the glob) are skipped, not
+                # fatal — a garbage file on shared storage must never take
+                # down the detector
                 continue
-            hid = int(p.stem.split("_")[1])
             data["age"] = now - data["t"]
             data["alive"] = data["age"] <= self.deadline_s
             out[hid] = data

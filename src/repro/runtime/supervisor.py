@@ -1,0 +1,239 @@
+"""Serve supervisor: SLO instrumentation and degraded-mode handling.
+
+Wires the previously-dormant runtime seeds (``Heartbeat`` /
+``FailureDetector``, ``StragglerDetector``, ``plan_remesh``) into the
+continuous engine's tick loop via its ``on_tick`` hook.  The supervisor
+models the serving fleet as ``n_replicas`` virtual replicas sharing the
+engine's clock:
+
+* every tick, each live replica beats its heartbeat file and records the
+  tick wall time into the straggler EWMA (a ``replica_slow`` fault
+  multiplies one replica's reported time by ``factor``);
+* a ``replica_death`` fault stops a replica's heartbeats, so the
+  ``FailureDetector`` declares it dead once its last beat ages past the
+  deadline on the same clock;
+* dead or straggling replicas trigger the degraded-mode ladder
+  (docs/SERVING.md "Failure model & recovery"):
+
+  1. **re-plan** — ``plan_remesh`` over the surviving chips, and the
+     engine's admission cap shrinks proportionally
+     (``set_slot_cap``) so the smaller fleet is not oversubscribed;
+  2. **oneshot fallback** — after ``slot_fault_threshold`` slot-pool
+     faults the slot cache is presumed unreliable;
+     :class:`DegradeToOneshot` aborts the tick loop and
+     ``drain_with_oneshot`` finishes every unfinished request on the
+     B=1 lockstep driver, sampling with the *engine's*
+     ``(request_id, position)`` key schedule so tokens stay
+     bit-identical to a fault-free continuous run;
+  3. **shed** — with no capacity at all, admission control rejects new
+     work at submit (``ServeConfig.max_queue``).
+
+Every degraded event is appended to ``ServeSupervisor.events`` and
+counted in ``ServeMetrics.degraded_events``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.elastic import plan_remesh
+from repro.runtime.faults import FaultPlan
+from repro.runtime.heartbeat import FailureDetector, Heartbeat
+from repro.runtime.straggler import StragglerDetector
+
+
+class DegradeToOneshot(RuntimeError):
+    """Slot pool faulted too often; abort the tick loop for the fallback."""
+
+
+class ServeSupervisor:
+    """Heartbeat/straggler supervision of a ``ContinuousEngine`` run.
+
+    Construction attaches the supervisor to ``engine.on_tick``.  Drive the
+    engine through :func:`run_supervised` (or call ``engine.run`` and
+    catch :class:`DegradeToOneshot` yourself).
+    """
+
+    def __init__(self, engine, *, n_replicas: int = 2,
+                 hb_dir: Optional[str] = None,
+                 hb_deadline_s: float = 2.0,
+                 faults: Optional[FaultPlan] = None,
+                 chips_per_replica: int = 1,
+                 model_parallel: int = 1,
+                 per_replica_batch: int = 1,
+                 dataset_size: int = 1_000_000,
+                 slot_fault_threshold: int = 3,
+                 straggler_patience: int = 3):
+        """Attach to ``engine`` and model an ``n_replicas`` virtual fleet.
+
+        ``hb_dir`` enables file-based failure detection (tests use a
+        tmpdir); without it a killed replica is declared dead on the next
+        tick directly.  ``faults`` defaults to the engine's plan so one
+        seeded plan drives both tick-level and replica-level events.
+        """
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        self.engine = engine
+        self.n_replicas = n_replicas
+        self.faults = faults if faults is not None else engine.faults
+        self.chips_per_replica = chips_per_replica
+        self.model_parallel = model_parallel
+        self.per_replica_batch = per_replica_batch
+        self.dataset_size = dataset_size
+        self.slot_fault_threshold = slot_fault_threshold
+        self.straggler = StragglerDetector(patience=straggler_patience)
+        self.detector = (FailureDetector(hb_dir, deadline_s=hb_deadline_s)
+                         if hb_dir else None)
+        self.heartbeats: Dict[int, Heartbeat] = (
+            {r: Heartbeat(hb_dir, r) for r in range(n_replicas)}
+            if hb_dir else {})
+        self._killed: Set[int] = set()      # stopped beating (fault fired)
+        self._slow: Dict[int, float] = {}   # replica -> tick-time factor
+        self.dead: Set[int] = set()         # declared dead / evicted
+        self.plans: List = []               # MeshPlan after each re-plan
+        self.events: List[dict] = []        # degraded-event log
+        self._tick = 0
+        self._oneshot_raised = False
+        engine.on_tick = self.on_tick
+
+    # ------------------------------------------------------------------ #
+    def live_replicas(self) -> List[int]:
+        """Replicas not yet declared dead, in id order."""
+        return [r for r in range(self.n_replicas) if r not in self.dead]
+
+    def on_tick(self, tick: int, dt: float, now: float) -> None:
+        """Per-tick supervision: beats, EWMA, detection, degraded ladder."""
+        t = self._tick
+        self._tick += 1
+        if self.faults is not None:
+            for ev in self.faults.take("replica_death", t):
+                self.engine.metrics.faults_injected += 1
+                self._killed.add(ev.target % self.n_replicas)
+            for ev in self.faults.take("replica_slow", t):
+                self.engine.metrics.faults_injected += 1
+                self._slow[ev.target % self.n_replicas] = ev.factor
+        for r in self.live_replicas():
+            if r in self._killed:
+                continue                    # dead replicas stop beating
+            if self.heartbeats:
+                self.heartbeats[r].beat(step=tick, now=now)
+            self.straggler.record(r, dt * self._slow.get(r, 1.0))
+        self.straggler.update_strikes()
+        newly_dead = set()
+        if self.detector is not None:
+            newly_dead |= {r for r in self.detector.dead_hosts(now=now)
+                           if r not in self.dead}
+        else:
+            newly_dead |= self._killed - self.dead
+        newly_dead |= {r for r in self.straggler.stragglers()
+                       if r not in self.dead}
+        if newly_dead:
+            self.dead |= newly_dead
+            self._replan(now, sorted(newly_dead))
+        if (self.engine.metrics.slot_faults >= self.slot_fault_threshold
+                and not self._oneshot_raised):
+            self._oneshot_raised = True
+            self.engine.metrics.degraded_events += 1
+            self.events.append({"t": now, "kind": "oneshot_fallback",
+                                "slot_faults":
+                                    self.engine.metrics.slot_faults})
+            raise DegradeToOneshot(
+                f"{self.engine.metrics.slot_faults} slot-pool faults "
+                f">= threshold {self.slot_fault_threshold}")
+
+    def _replan(self, now: float, lost: List[int]) -> None:
+        """Degraded-mode re-plan after replica loss / straggler eviction."""
+        n_live = len(self.live_replicas())
+        plan = plan_remesh(n_live * self.chips_per_replica,
+                           self.model_parallel, self.per_replica_batch,
+                           self.dataset_size)
+        self.plans.append(plan)
+        # shrink admissions proportionally to surviving capacity; the
+        # engine clamps to >= 1 (it is the one real executor here)
+        cap = max(1, (self.engine.serve.max_slots * max(n_live, 1))
+                  // self.n_replicas)
+        self.engine.set_slot_cap(cap)
+        self.engine.metrics.degraded_events += 1
+        self.events.append({
+            "t": now, "kind": "replan", "lost": lost,
+            "live": self.live_replicas(), "slot_cap": self.engine.slot_cap,
+            "plan": dataclasses.asdict(plan) if plan is not None else None})
+
+
+# ---------------------------------------------------------------------- #
+# oneshot fallback
+# ---------------------------------------------------------------------- #
+def drain_with_oneshot(engine, now: float = 0.0):
+    """Finish every unfinished engine request on the B=1 lockstep driver.
+
+    Uses the *engine's* sampling-key schedule (``sampling_key(base_key,
+    request_id, position)``; position = original prompt length + token
+    index) rather than the legacy shared oneshot key, and mirrors the
+    engine's retirement conditions exactly (budget / EOS / cache full), so
+    drained tokens are bit-identical to a fault-free continuous run.
+    Returns the engine's full results dict.
+    """
+    from repro.launch.steps import build_serve_setup
+    from repro.serve.engine import sampling_key
+
+    pending = engine.takeover_unfinished()
+    if not pending:
+        return dict(engine.results)
+    setup = build_serve_setup(engine.model, None, engine.mesh, 1,
+                              engine.serve.max_seq,
+                              kv_fmt=engine.serve.kv_fmt)
+    prefill = jax.jit(setup.prefill_fn)
+    decode = jax.jit(setup.decode_fn)
+    temperature = engine.serve.temperature
+    max_seq = engine.serve.max_seq
+
+    def pick(logits_row, rid, pos):
+        if temperature > 0:
+            k = sampling_key(engine._base_key, rid, pos)
+            return int(jax.random.categorical(k, logits_row / temperature))
+        return int(jnp.argmax(logits_row))
+
+    for req, prefix in pending:
+        exp = req.expiry()
+        if exp is not None and exp <= now:
+            engine.finalize_external(req, prefix, now, status="timed_out")
+            continue
+        toks = list(prefix)
+        seq = np.concatenate(
+            [req.prompt, np.asarray(toks, np.int32)]).astype(np.int32)
+        logits, cache = prefill(engine.params,
+                                {"tokens": jnp.asarray(seq[None, :])})
+        pos = int(seq.size)             # position of the next sample
+        remaining = req.max_new_tokens - len(toks)
+        rid = req.request_id
+        while remaining > 0:
+            tok = pick(logits[0], rid, pos)
+            toks.append(tok)
+            remaining -= 1
+            # same retirement conditions as ContinuousEngine._record_token:
+            # budget, EOS, or the recorded token's cache index (== pos)
+            # falling outside the slot
+            if (remaining <= 0
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or pos >= max_seq):
+                break
+            logits, cache = decode(engine.params, cache,
+                                   jnp.asarray([tok], jnp.int32))
+            pos += 1
+        engine.finalize_external(req, toks, now, status="ok")
+    return dict(engine.results)
+
+
+def run_supervised(engine, clock=None):
+    """``engine.run`` with the supervisor's oneshot-fallback rung applied."""
+    try:
+        return engine.run(clock=clock)
+    except DegradeToOneshot:
+        # the slot pool is presumed unreliable: drain what's left on the
+        # lockstep driver (token-identical; see drain_with_oneshot)
+        now = engine.metrics.run_wall
+        return drain_with_oneshot(engine, now=now)

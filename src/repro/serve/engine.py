@@ -45,13 +45,24 @@ Sampling key schedule (docs/SERVING.md): every sampled token uses
 ``fold_in(fold_in(fold_in(PRNGKey(seed), SAMPLE_FOLD), request_id),
 position)`` — domain-separated from the quantizer streams by SAMPLE_FOLD,
 and unique per (request, position) so concurrent slots never share a key.
+
+Failure model (docs/SERVING.md "Failure model & recovery"): the engine is
+hardened against per-request deadlines (timeout retirement with partial
+results), queue overload (bounded queue + load shedding), and injected
+faults (``runtime.faults.FaultPlan``: prefill/decode dispatch failures,
+detected slot-cache poison, frozen clocks).  A fault victim is re-queued
+with linear backoff and *replayed* by re-prefilling its prompt plus the
+generated prefix recorded host-side — because sampling keys derive from
+``(request_id, position)`` and KV quantization is deterministic, the
+recovered request's tokens are bit-identical to a fault-free run.  Every
+request retires with a typed status on its ``RequestResult``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +72,7 @@ from repro.config import ServeConfig
 from repro.launch.mesh import make_host_mesh
 from repro.parallel import partitioner as pt
 from repro.parallel.axes import partitioning_context
+from repro.runtime.faults import DEFAULT_FREEZE_READS, FaultPlan
 from repro.serve.metrics import ServeMetrics
 from repro.serve.slots import SlotPool, init_slot_cache
 
@@ -104,16 +116,32 @@ class Request:
     max_new_tokens: int
     arrival_time: float = 0.0       # seconds relative to run() start
     eos_id: Optional[int] = None
+    deadline_s: Optional[float] = None   # from arrival; None = no deadline
+    attempts: int = 0               # fault-triggered re-queues so far
+    not_before: float = 0.0         # retry backoff gate (seconds)
+
+    def expiry(self) -> Optional[float]:
+        """Absolute deadline instant, or None when unbounded."""
+        if self.deadline_s is None:
+            return None
+        return self.arrival_time + self.deadline_s
 
 
 @dataclasses.dataclass
 class RequestResult:
-    """Completed request: generated ids plus its timing record."""
+    """Retired request: generated ids, timing record, terminal status.
+
+    ``status`` is one of ``metrics.REQUEST_STATUSES``: "ok" (possibly
+    after fault recovery), "timed_out" (deadline expired; ``tokens`` holds
+    the partial result), "shed" (queue full at submit), or "failed" (fault
+    retries exhausted; partial tokens).
+    """
 
     request_id: int
     prompt: np.ndarray
     tokens: np.ndarray              # (n_generated,) int32
     timing: object                  # metrics.RequestTiming
+    status: str = "ok"
 
 
 class ContinuousEngine:
@@ -129,15 +157,27 @@ class ContinuousEngine:
         The model's parameter pytree.
     serve:
         ``repro.config.ServeConfig`` — slot count, cache length, sampling
-        temperature and seed.
+        temperature and seed, plus the admission-control knobs (deadline,
+        queue bound, retry policy).
     mesh:
         Optional ``jax.sharding.Mesh``; defaults to the host mesh.  The
         prefill/decode functions run under the same partitioning context
         the oneshot driver uses, so sharding annotations resolve
         identically.
+    faults:
+        Optional ``runtime.faults.FaultPlan``.  The engine polls it at its
+        explicit hook points (prefill dispatch, decode tick, slot cache,
+        clock reads) and recovers per the retry policy; every recovery
+        path is therefore seed-reproducible.
+    on_tick:
+        Optional callback ``(tick_index, tick_wall_s, now_s)`` invoked
+        after every decode-tick attempt — the supervisor's hook for
+        heartbeat/straggler instrumentation (``runtime.supervisor``).
     """
 
-    def __init__(self, model, params, serve: ServeConfig, mesh=None):
+    def __init__(self, model, params, serve: ServeConfig, mesh=None,
+                 faults: Optional[FaultPlan] = None,
+                 on_tick: Optional[Callable[[int, float, float], None]] = None):
         """Allocate the slot cache and jit the engine's device functions."""
         if model.decode_slots is None or model.slot_cache_spec is None:
             raise ValueError(
@@ -160,6 +200,8 @@ class ContinuousEngine:
         self.model = model
         self.params = params
         self.serve = serve
+        self.faults = faults
+        self.on_tick = on_tick
         self.mesh = mesh if mesh is not None else make_host_mesh()
         rules = pt.merge_rules(pt.DEFAULT_RULES,
                                model.config.sharding_overrides)
@@ -272,6 +314,14 @@ class ContinuousEngine:
         self._cur_tokens = np.zeros((K,), np.int32)
         self._active = np.zeros((K,), bool)
         self._rids = np.zeros((K,), np.int32)
+        # fault-tolerance state: per-domain counters the FaultPlan is
+        # polled against, the clock-freeze window, and the degraded-mode
+        # admission cap (shrunk by the supervisor on replica loss)
+        self._tick_index = 0
+        self._prefill_count = 0
+        self._freeze_reads = 0
+        self._freeze_val = 0.0
+        self.slot_cap = K
         # device copies of the three slot vectors; re-uploaded only after
         # admission/retirement events (``_dirty``), so an event-free tick
         # costs exactly one dispatch + one (K,) sync
@@ -282,12 +332,22 @@ class ContinuousEngine:
 
     def submit(self, prompt, max_new_tokens: Optional[int] = None,
                arrival_time: float = 0.0,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Queue a request; returns its request id.
 
         ``arrival_time`` is in seconds relative to the start of ``run()``;
         the scheduler will not admit the request before that time (this is
-        how benchmark traces model Poisson arrivals).
+        how benchmark traces model Poisson arrivals).  ``deadline_s``
+        (default ``ServeConfig.deadline_s``) bounds the request's life from
+        arrival: expiry in the queue rejects it un-admitted, expiry in
+        flight retires it with partial tokens (status "timed_out").
+
+        When ``ServeConfig.max_queue`` > 0 and that many requests are
+        already waiting, the request is *shed*: it is never queued, its
+        result (status "shed", no tokens) is recorded immediately, and the
+        shed counter increments — bounded memory under overload instead of
+        unbounded queue growth.
         """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
@@ -302,11 +362,22 @@ class ContinuousEngine:
                   else max_new_tokens)
         if budget < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        self.queue.append(Request(request_id=rid, prompt=prompt,
-                                  max_new_tokens=budget,
-                                  arrival_time=arrival_time, eos_id=eos_id))
+        if deadline_s is None:
+            deadline_s = self.serve.deadline_s
         self.metrics.on_submit(rid, prompt.size, arrival_time)
         self._tokens_by_req[rid] = []
+        req = Request(request_id=rid, prompt=prompt, max_new_tokens=budget,
+                      arrival_time=arrival_time, eos_id=eos_id,
+                      deadline_s=deadline_s)
+        if (self.serve.max_queue > 0
+                and len(self.queue) >= self.serve.max_queue):
+            self.metrics.on_shed(rid, arrival_time)
+            self.results[rid] = RequestResult(
+                request_id=rid, prompt=prompt,
+                tokens=np.zeros((0,), np.int32),
+                timing=self.metrics.timings[rid], status="shed")
+            return rid
+        self.queue.append(req)
         return rid
 
     def run(self, clock: Optional[Callable[[], float]] = None
@@ -320,64 +391,121 @@ class ContinuousEngine:
         self.queue = collections.deque(
             sorted(self.queue, key=lambda r: r.arrival_time))
         t0 = time.perf_counter()
-        now_fn = clock or (lambda: time.perf_counter() - t0)
+        raw_now = clock or (lambda: time.perf_counter() - t0)
+
+        def now_fn():
+            # clock_freeze fault: hold time still for the injected window
+            # (a bounded number of *reads*, so the loop always thaws well
+            # before the frozen-clock stall guard below can trip)
+            if self._freeze_reads > 0:
+                self._freeze_reads -= 1
+                return self._freeze_val
+            return raw_now()
+
         last_idle_now, stalled = None, 0
-        while self.queue or self.pool.n_active:
-            self._admit(now_fn)
-            if self.pool.n_active:
-                self._tick(now_fn)
-                stalled = 0
-                continue
-            if not self.queue:
-                break
-            # idle: nothing decodable until the next arrival
-            now = now_fn()
-            if self.queue[0].arrival_time > now:
-                if clock is None:
-                    t_sleep = time.perf_counter()
-                    time.sleep(min(self.queue[0].arrival_time - now, 0.05))
-                    self.metrics.idle_wall += time.perf_counter() - t_sleep
-                else:
-                    # injected clocks must advance on their own; guard
-                    # against a frozen clock turning this into a hang
-                    stalled = stalled + 1 if now == last_idle_now else 0
-                    if stalled > 1000:
-                        raise RuntimeError(
-                            "injected clock is not advancing past the next "
-                            f"arrival_time ({self.queue[0].arrival_time}); "
-                            "engine cannot make progress")
-                last_idle_now = now
-        # accumulate (not overwrite): timings persist across run() calls,
-        # so throughput over multiple runs must divide by their total wall
-        self.metrics.run_wall += now_fn()
+        try:
+            while self.queue or self.pool.n_active:
+                self._expire_deadlines(now_fn)
+                self._admit(now_fn)
+                if self.pool.n_active:
+                    self._tick(now_fn)
+                    stalled = 0
+                    continue
+                if not self.queue:
+                    break
+                # idle: nothing decodable until the next eligible request
+                # (arrival in the future, or retry backoff gate not open)
+                now = now_fn()
+                next_ready = min(max(r.arrival_time, r.not_before)
+                                 for r in self.queue)
+                if next_ready > now:
+                    if clock is None:
+                        t_sleep = time.perf_counter()
+                        time.sleep(min(next_ready - now, 0.05))
+                        self.metrics.idle_wall += (time.perf_counter()
+                                                   - t_sleep)
+                    else:
+                        # injected clocks must advance on their own; guard
+                        # against a frozen clock turning this into a hang
+                        stalled = stalled + 1 if now == last_idle_now else 0
+                        if stalled > 1000:
+                            raise RuntimeError(
+                                "injected clock is not advancing past the "
+                                f"next eligible time ({next_ready}); engine "
+                                "cannot make progress")
+                    last_idle_now = now
+        finally:
+            # accumulate (not overwrite): timings persist across run()
+            # calls, so throughput over multiple runs must divide by their
+            # total wall.  raw_now sidesteps any still-open freeze window.
+            self.metrics.run_wall += raw_now()
         return dict(self.results)
 
     # ------------------------------------------------------------------ #
     # scheduler internals
     # ------------------------------------------------------------------ #
+    def _next_eligible(self, now: float) -> Optional[Request]:
+        """Pop the first queued request that may run now (FCFS order).
+
+        Eligibility = arrived (``arrival_time <= now``) and past its retry
+        backoff gate (``not_before <= now``).  Returns None when nothing
+        is eligible yet.
+        """
+        for i, req in enumerate(self.queue):
+            if req.arrival_time <= now and req.not_before <= now:
+                del self.queue[i]
+                return req
+        return None
+
     def _admit(self, now_fn):
-        """FCFS admission: fill free slots with arrived requests.
+        """FCFS admission: fill free slots with eligible requests.
 
         Prompts are zero-padded to their power-of-two bucket
         (``prefill_bucket``) before prefill, with the true length passed
         as a traced scalar — one compiled prefill program per bucket.
+
+        A *replayed* request (fault victim, ``attempts > 0``) is
+        re-admitted by prefilling its prompt concatenated with the
+        generated prefix recorded host-side; the first fresh token is then
+        sampled at position ``prompt_len + len(prefix)`` with the same
+        ``(request_id, position)`` key a fault-free run would have used,
+        so recovery is token-bit-identical.  ``SlotState.prompt_len``
+        keeps the *original* prompt length so the cache-index/retirement
+        arithmetic in ``_record_token`` is invariant under replay.
+
+        Admission is capped at ``slot_cap`` (<= max_slots); the supervisor
+        shrinks it in degraded mode after replica loss.
         """
-        while (self.queue and self.pool.n_free
-               and self.queue[0].arrival_time <= now_fn()):
-            req = self.queue.popleft()
+        while self.pool.n_free and self.pool.n_active < self.slot_cap:
+            req = self._next_eligible(now_fn())
+            if req is None:
+                return
+            prefix = self._tokens_by_req[req.request_id]
+            total = req.prompt.size + len(prefix)
+            if self.faults is not None:
+                attempt = self._prefill_count
+                self._prefill_count += 1
+                due = self.faults.take("prefill_fail", attempt)
+                if due:
+                    # injected prefill dispatch failure: the request never
+                    # touches a slot; re-queue it behind its backoff gate
+                    self.metrics.faults_injected += len(due)
+                    self._requeue(req, now_fn())
+                    continue
             slot = self.pool.acquire(req.request_id, req.prompt.size,
-                                     req.max_new_tokens)
-            bucket = prefill_bucket(req.prompt.size, self.serve.max_seq)
+                                     req.max_new_tokens - len(prefix))
+            bucket = prefill_bucket(total, self.serve.max_seq)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :req.prompt.size] = req.prompt
+            if prefix:
+                padded[0, req.prompt.size:total] = prefix
             logits, pcache = self._prefill(
-                self.params, {"tokens": jnp.asarray(padded)},
-                req.prompt.size)
+                self.params, {"tokens": jnp.asarray(padded)}, total)
             self.cache = self._write(self.cache, pcache, slot)
-            # first generated token, drawn at position == prompt_len
+            # first generated token, drawn at position == total sequence
+            # length so far (== prompt_len on a fresh admission)
             if self.serve.temperature > 0:
-                key = sampling_key(self._base_key, req.request_id,
-                                   req.prompt.size)
+                key = sampling_key(self._base_key, req.request_id, total)
                 tok = int(jax.random.categorical(
                     key, logits[0] / self.serve.temperature))
             else:
@@ -411,28 +539,201 @@ class ContinuousEngine:
             self._rids[slot] = req.request_id
 
     def _tick(self, now_fn):
-        """One fused decode+sample step over every active slot."""
-        if self._dirty:
-            self._tokens_dev = jnp.asarray(self._cur_tokens)
-            self._active_dev = jnp.asarray(self._active)
-            self._rids_dev = jnp.asarray(self._rids)
-            self._dirty = False
-        toks_dev, self.cache = self._step(
-            self.params, self.cache, self._tokens_dev, self._active_dev,
-            self._rids_dev)
-        toks = np.asarray(toks_dev)
-        self.metrics.decode_ticks += 1
+        """One fused decode+sample step over every active slot.
+
+        Fault hook point: ``clock_freeze`` / ``slot_corrupt`` /
+        ``decode_fail`` events are polled against the tick counter before
+        the fused step runs; a decode failure victimizes every active slot
+        (the whole fused dispatch failed) and re-queues them for replay.
+        ``on_tick`` fires after every attempt — including failed ones —
+        with the tick's real wall time, which is what the supervisor's
+        heartbeat/straggler instrumentation consumes.
+        """
+        tick = self._tick_index
+        self._tick_index += 1
+        t_start = time.perf_counter()
+        try:
+            if self.faults is not None:
+                for ev in self.faults.take("clock_freeze", tick):
+                    self.metrics.faults_injected += 1
+                    # read the instant *before* opening the window so the
+                    # frozen value is the current time, then hold it for
+                    # the next `duration` reads
+                    self._freeze_val = now_fn()
+                    self._freeze_reads = ev.duration or DEFAULT_FREEZE_READS
+                for ev in self.faults.take("slot_corrupt", tick):
+                    self.metrics.faults_injected += 1
+                    self.metrics.slot_faults += 1
+                    self._corrupt_slot(ev, now_fn)
+                due = self.faults.take("decode_fail", tick)
+                if due:
+                    self.metrics.faults_injected += len(due)
+                    self.metrics.slot_faults += len(due)
+                    self._fail_tick(now_fn)
+                    return
+                if not self.pool.n_active:
+                    # every occupant was a corruption victim; nothing to
+                    # decode this tick
+                    return
+            if self._dirty:
+                self._tokens_dev = jnp.asarray(self._cur_tokens)
+                self._active_dev = jnp.asarray(self._active)
+                self._rids_dev = jnp.asarray(self._rids)
+                self._dirty = False
+            toks_dev, self.cache = self._step(
+                self.params, self.cache, self._tokens_dev, self._active_dev,
+                self._rids_dev)
+            toks = np.asarray(toks_dev)
+            self.metrics.decode_ticks += 1
+            now = now_fn()
+            for slot in np.nonzero(self._active)[0]:
+                slot = int(slot)
+                rid = self.pool.state(slot).request_id
+                self._record_token(slot, self._live[rid], int(toks[slot]),
+                                   now)
+            if not self._dirty:
+                # no retirement this tick: the sampled tokens feed straight
+                # back in without a host->device upload
+                self._tokens_dev = toks_dev
+        finally:
+            if self.on_tick is not None:
+                self.on_tick(tick, time.perf_counter() - t_start, now_fn())
+
+    # ------------------------------------------------------------------ #
+    # fault recovery
+    # ------------------------------------------------------------------ #
+    def _evict(self, slot: int) -> Request:
+        """Tear a live request out of ``slot`` without finalizing it."""
+        rid = self.pool.state(slot).request_id
+        req = self._live.pop(rid)
+        self._active[slot] = False
+        self._dirty = True
+        self.pool.release(slot)
+        if self._release_scales is not None:
+            self.cache = self._release_scales(self.cache, slot)
+        return req
+
+    def _requeue(self, req: Request, now: float):
+        """Re-queue a fault victim with linear backoff (or fail it out).
+
+        The generated prefix stays in ``_tokens_by_req``; re-admission
+        replays it (see ``_admit``).  When the retry budget is exhausted
+        the request retires with status "failed" and its partial tokens.
+        """
+        req.attempts += 1
+        if req.attempts > self.serve.max_retries:
+            self._finalize(req, now, status="failed")
+            return
+        req.not_before = now + req.attempts * self.serve.retry_backoff_s
+        self.metrics.on_retry(req.request_id)
+        self.queue.append(req)
+
+    def _fail_tick(self, now_fn):
+        """Injected decode dispatch failure: all active slots are victims."""
         now = now_fn()
         for slot in np.nonzero(self._active)[0]:
-            slot = int(slot)
-            rid = self.pool.state(slot).request_id
-            self._record_token(slot, self._live[rid], int(toks[slot]), now)
-        if not self._dirty:
-            # no retirement this tick: the sampled tokens feed straight
-            # back in without a host->device upload
-            self._tokens_dev = toks_dev
+            self._requeue(self._evict(int(slot)), now)
 
-    def _retire(self, slot: int, req: Request, now: float):
+    def _corrupt_slot(self, ev, now_fn):
+        """Overwrite one slot's cache rows with deterministic garbage.
+
+        Modelled as *detected* poison (ECC-style): the scrubber knows the
+        slot is bad, so the occupant (if any) is evicted for deterministic
+        replay and the slot's scale rows are zeroed before reuse.  Under
+        ``kv_fmt=none`` (no scale rows) the garbage codes are neutralized
+        by pos-masking plus the next occupant's prefill overwrite.
+        """
+        K = self.serve.max_slots
+        slot = ev.target % K if ev.target >= 0 else 0
+        rng = np.random.default_rng((self.faults.seed, ev.at, slot))
+        cache = dict(self.cache)
+        for name, arr in cache.items():
+            if name == "pos":
+                continue
+            junk = rng.integers(-100, 100,
+                                size=(arr.shape[0], 1) + arr.shape[2:])
+            cache[name] = jax.lax.dynamic_update_slice(
+                arr, jnp.asarray(junk).astype(arr.dtype),
+                (0, slot) + (0,) * (arr.ndim - 2))
+        self.cache = cache
+        if self._active[slot]:
+            self._requeue(self._evict(slot), now_fn())
+        elif self._release_scales is not None:
+            self.cache = self._release_scales(self.cache, slot)
+
+    def _expire_deadlines(self, now_fn):
+        """Retire every request whose deadline has passed.
+
+        Queued requests that were never admitted land in the metrics'
+        rejected bucket (``on_queue_timeout``); previously-admitted
+        victims awaiting replay, and in-flight requests, retire with
+        status "timed_out" and whatever tokens they generated.
+        """
+        if not self.queue and not self._live:
+            return
+        now = now_fn()
+        keep: collections.deque = collections.deque()
+        for req in self.queue:
+            exp = req.expiry()
+            if exp is None or exp > now:
+                keep.append(req)
+                continue
+            self._finalize(req, now, status="timed_out")
+        self.queue = keep
+        for slot in np.nonzero(self._active)[0]:
+            slot = int(slot)
+            req = self._live[self.pool.state(slot).request_id]
+            exp = req.expiry()
+            if exp is not None and exp <= now:
+                self._retire(slot, req, now, status="timed_out")
+
+    def _finalize(self, req: Request, now: float, status: str):
+        """Materialize a terminal result for a request not holding a slot."""
+        rid = req.request_id
+        toks = np.asarray(self._tokens_by_req.get(rid, []), np.int32)
+        if status == "timed_out" and self.metrics.timings[rid].admitted is None:
+            self.metrics.on_queue_timeout(rid, now)
+        else:
+            self.metrics.on_complete(rid, now, n_generated=int(toks.size),
+                                     status=status)
+        self.results[rid] = RequestResult(
+            request_id=rid, prompt=req.prompt, tokens=toks,
+            timing=self.metrics.timings[rid], status=status)
+
+    # ------------------------------------------------------------------ #
+    # degraded-mode hooks (runtime.supervisor)
+    # ------------------------------------------------------------------ #
+    def set_slot_cap(self, cap: int):
+        """Cap concurrent admissions (degraded mode); clamped to [1, K]."""
+        self.slot_cap = max(1, min(int(cap), self.serve.max_slots))
+
+    def takeover_unfinished(self) -> List[Tuple[Request, List[int]]]:
+        """Drain every unfinished request for an external driver.
+
+        Evicts all live slots and empties the queue, returning
+        ``(request, generated_prefix)`` pairs in request-id order.  The
+        supervisor's oneshot fallback finishes each with the *engine's*
+        sampling-key schedule and reports results via
+        ``finalize_external`` — tokens stay bit-identical to a fault-free
+        continuous run.
+        """
+        out = []
+        for slot in np.nonzero(self._active)[0]:
+            req = self._evict(int(slot))
+            out.append((req, list(self._tokens_by_req[req.request_id])))
+        while self.queue:
+            req = self.queue.popleft()
+            out.append((req, list(self._tokens_by_req[req.request_id])))
+        return sorted(out, key=lambda p: p[0].request_id)
+
+    def finalize_external(self, req: Request, tokens, now: float,
+                          status: str = "ok"):
+        """Record a result completed outside the engine (oneshot fallback)."""
+        self._tokens_by_req[req.request_id] = [int(t) for t in tokens]
+        self._finalize(req, now, status=status)
+
+    def _retire(self, slot: int, req: Request, now: float,
+                status: str = "ok"):
         """Release a finished slot and materialize its result."""
         if self._active[slot]:
             self._dirty = True
@@ -445,7 +746,7 @@ class ContinuousEngine:
         self._live.pop(req.request_id, None)
         toks = np.asarray(self._tokens_by_req[req.request_id], np.int32)
         self.metrics.on_complete(req.request_id, now,
-                                 n_generated=int(toks.size))
+                                 n_generated=int(toks.size), status=status)
         self.results[req.request_id] = RequestResult(
             request_id=req.request_id, prompt=req.prompt, tokens=toks,
-            timing=self.metrics.timings[req.request_id])
+            timing=self.metrics.timings[req.request_id], status=status)

@@ -15,6 +15,13 @@ Sampling note: the lockstep driver keeps its legacy *shared* sampling key
 (one fold per decode step, same key for every row).  The continuous engine
 uses the per-slot, per-position schedule in ``repro.serve.engine`` instead;
 see docs/SERVING.md for why the shared key is wrong under multi-tenancy.
+
+A third role — the engine's degraded-mode *fallback* after repeated
+slot-pool faults — lives in ``repro.runtime.supervisor.drain_with_oneshot``
+rather than here: the drain reuses this driver's ``build_serve_setup``
+device functions but samples with the engine's ``(request_id, position)``
+key schedule, so drained tokens stay bit-identical to a fault-free
+continuous run (which the legacy shared key above could not provide).
 """
 from __future__ import annotations
 

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +48,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import build_epoch_fn, build_train_setup
 from repro.models.registry import Model, build_model
 from repro.optim.schedule import make_schedule
+from repro.runtime.preemption import Preempted, PreemptionHandler
 
 
 @dataclasses.dataclass
@@ -64,7 +65,8 @@ class EpochStats:
 class Trainer:
     def __init__(self, run: RunConfig, dataset, *, mode: str = "dpquant",
                  eval_dataset=None, mesh=None, checkpoint_dir: str = None,
-                 group_size: int = 1, eval_fn: Callable = None):
+                 group_size: int = 1, eval_fn: Callable = None,
+                 preemption: Optional[PreemptionHandler] = None):
         self.run = run
         self.dataset = dataset
         self.eval_dataset = eval_dataset
@@ -107,6 +109,13 @@ class Trainer:
         self.history: List[EpochStats] = []
         self.ckpt = (CheckpointManager(checkpoint_dir)
                      if checkpoint_dir else None)
+        self.preemption = preemption
+        # epoch cursor: train(n) runs n epochs starting here; restore sets
+        # it past the checkpointed epoch (or *at* it for mid-epoch resume)
+        self._next_epoch = 0
+        # mid-epoch resume record ({"epoch", "epoch_step", "epoch_losses"})
+        # set by restore_latest when the checkpoint was a preemption save
+        self._mid_epoch: Optional[dict] = None
 
     # ------------------------------------------------------------------ #
     def _probe_step(self, params, opt_state, batch, seed, flags):
@@ -121,27 +130,46 @@ class Trainer:
     def train_epoch(self, epoch: int) -> EpochStats:
         t0 = time.time()
         run = self.run
-        # ---- Algorithm 1 (analysis) ----
-        if self.mode == "dpquant":
-            nb = min(run.dp.analysis_batch_size, run.global_batch)
-            nb = max(run.dp.microbatch_size, nb)
-            probe_batches = [self.dataset.get(self._probe_rng.randint(
-                0, self.dataset.n, nb)) for _ in range(run.dp.analysis_reps)]
-            self.scheduler.maybe_analyze(
-                probe_step=self._probe_step, params=self.params,
-                opt_state=self.opt_state, batches=probe_batches,
-                sample_rate=min(1.0, nb / self.dataset.n),
-                accountant=self.accountant,
-                epoch=epoch, seed=run.seed * 1000 + epoch)
-        # ---- Algorithm 2 (selection) ----
-        policy = self.scheduler.select(epoch)
+        resume = None
+        if self._mid_epoch is not None:
+            if self._mid_epoch["epoch"] != epoch:
+                raise RuntimeError(
+                    f"mid-epoch checkpoint is for epoch "
+                    f"{self._mid_epoch['epoch']}, cannot run epoch {epoch}")
+            resume = self._mid_epoch
+            self._mid_epoch = None
+        if resume is None:
+            # ---- Algorithm 1 (analysis) ----
+            if self.mode == "dpquant":
+                nb = min(run.dp.analysis_batch_size, run.global_batch)
+                nb = max(run.dp.microbatch_size, nb)
+                probe_batches = [self.dataset.get(self._probe_rng.randint(
+                    0, self.dataset.n, nb))
+                    for _ in range(run.dp.analysis_reps)]
+                self.scheduler.maybe_analyze(
+                    probe_step=self._probe_step, params=self.params,
+                    opt_state=self.opt_state, batches=probe_batches,
+                    sample_rate=min(1.0, nb / self.dataset.n),
+                    accountant=self.accountant,
+                    epoch=epoch, seed=run.seed * 1000 + epoch)
+            # ---- Algorithm 2 (selection) ----
+            policy = self.scheduler.select(epoch)
+        else:
+            # mid-epoch resume: analysis + selection already ran before the
+            # preemption and their RNG draws / accountant charges are in
+            # the restored state — re-running either would double-consume
+            # the probe and scheduler streams.  The restored scheduler
+            # still holds this epoch's policy.
+            policy = self.scheduler.current
         flags = policy.flags()
 
         # ---- DP-SGD steps ----
+        start = resume["epoch_step"] if resume else 0
+        prior = resume["epoch_losses"] if resume else []
         if run.epoch_executor == "scan":
-            losses = self._train_steps_scan(flags)
+            losses = self._train_steps_scan(flags, epoch, start, prior)
         else:
-            losses = self._train_steps_loop(flags)
+            losses = self._train_steps_loop(flags, epoch, start, prior)
 
         eps, _ = (self.accountant.get_epsilon(run.dp.delta)
                   if run.dp.enabled else (0.0, 0))
@@ -157,11 +185,34 @@ class Trainer:
             self.save(epoch)
         return stats
 
-    def _train_steps_loop(self, flags) -> List[float]:
+    def _maybe_preempt(self, epoch: int, epoch_step: int,
+                       losses: List[float]) -> None:
+        """Step-boundary preemption poll (both executors call this).
+
+        When the handler fires, a *mid-epoch* checkpoint is written —
+        params, opt state, accountant history, scheduler EMA/policy,
+        sampler + probe RNG stream positions, and the epoch cursor — and
+        :class:`Preempted` is raised.  The accountant is already exact at
+        every step boundary (the loop executor charges per step; the scan
+        executor charges per chunk, and consecutive identical SGM events
+        merge), so the saved epsilon equals the uninterrupted run's at the
+        same global step.
+        """
+        if self.preemption is None or not self.preemption.should_preempt(
+                self.step):
+            return
+        if self.ckpt is not None:
+            self.save(epoch, epoch_step=epoch_step, epoch_losses=losses,
+                      mid_epoch=True)
+            self.ckpt.wait()
+        raise Preempted(self.step)
+
+    def _train_steps_loop(self, flags, epoch: int, start: int = 0,
+                          prior: List[float] = ()) -> List[float]:
         """Legacy executor: one dispatch + host sync + charge per step."""
         run = self.run
-        losses = []
-        for _ in range(run.steps_per_epoch):
+        losses = list(prior)
+        for es in range(start, run.steps_per_epoch):
             batch = self._sample_batch()
             lr = self.schedule(self.step)
             self.params, self.opt_state, metrics = self.step_fn(
@@ -173,17 +224,22 @@ class Trainer:
                     noise_multiplier=run.dp.noise_multiplier,
                     sample_rate=self.sampler.q, steps=1, label="train")
             self.step += 1
+            self._maybe_preempt(epoch, es + 1, losses)
         return losses
 
-    def _train_steps_scan(self, flags) -> List[float]:
+    def _train_steps_scan(self, flags, epoch: int, start: int = 0,
+                          prior: List[float] = ()) -> List[float]:
         """Scan executor: the epoch (in chunks of ``epoch_chunk`` steps, or
         whole) runs as one compiled program; the host syncs once per chunk
-        and the accountant is charged once per epoch."""
+        and the accountant is charged once per chunk — consecutive
+        identical SGM events merge, so the history is identical to a
+        single per-epoch charge while staying exact at every chunk
+        boundary (where preemption may checkpoint)."""
         run = self.run
         steps = run.steps_per_epoch
         chunk = run.epoch_chunk if run.epoch_chunk > 0 else steps
-        losses: List[float] = []
-        done = 0
+        losses: List[float] = list(prior)
+        done = start
         while done < steps:
             k = min(chunk, steps - done)
             idx = self.sampler.sample_epoch(k)
@@ -199,16 +255,25 @@ class Trainer:
             losses.extend(float(v) for v in np.asarray(metrics["loss"]))
             self.step += k
             done += k
-        if run.dp.enabled:
-            self.accountant.step(
-                noise_multiplier=run.dp.noise_multiplier,
-                sample_rate=self.sampler.q, steps=steps, label="train")
+            if run.dp.enabled:
+                self.accountant.step(
+                    noise_multiplier=run.dp.noise_multiplier,
+                    sample_rate=self.sampler.q, steps=k, label="train")
+            self._maybe_preempt(epoch, done, losses)
         return losses
 
     def train(self, epochs: int, *, eps_budget: Optional[float] = None,
               verbose: bool = False) -> List[EpochStats]:
-        for e in range(epochs):
+        """Train ``epochs`` more epochs from the current epoch cursor.
+
+        A fresh trainer starts at epoch 0; after ``restore_latest`` the
+        cursor sits past the last completed epoch (or *at* the preempted
+        epoch for a mid-epoch checkpoint, which is finished first).
+        """
+        start = self._next_epoch
+        for e in range(start, start + epochs):
             stats = self.train_epoch(e)
+            self._next_epoch = e + 1
             if verbose:
                 print(f"epoch {e}: loss={stats.loss:.4f} eps={stats.eps:.3f} "
                       f"k={stats.quantized_layers} acc={stats.accuracy}")
@@ -244,13 +309,28 @@ class Trainer:
         return np.asarray(jnp.argmax(logits, -1))
 
     # ------------------------------------------------------------------ #
-    def save(self, epoch: int) -> None:
+    def save(self, epoch: int, *, epoch_step: int = 0,
+             epoch_losses: List[float] = (), mid_epoch: bool = False) -> None:
+        """Checkpoint everything a bit-identical resume needs.
+
+        Besides params/opt, the aux payload carries the accountant
+        history, scheduler EMA + current policy, sampler RNG cursor, the
+        probe RNG stream position (analysis batch draws), and — for
+        preemption saves (``mid_epoch``) — the epoch step index and the
+        partial per-step losses so the finished epoch's stats match the
+        uninterrupted run's.
+        """
         aux = {
             "accountant": self.accountant.state_dict(),
             "scheduler": self.scheduler.state_dict(),
             "sampler": self.sampler.state_dict(),
+            "probe_rng": self._probe_rng.get_state(),
+            "history": [dataclasses.asdict(s) for s in self.history],
             "step": self.step,
             "epoch": epoch,
+            "mid_epoch": bool(mid_epoch),
+            "epoch_step": int(epoch_step),
+            "epoch_losses": [float(x) for x in epoch_losses],
         }
         self.ckpt.save(self.step, {"params": self.params,
                                    "opt": self.opt_state}, aux)
@@ -268,5 +348,18 @@ class Trainer:
         self.accountant = RDPAccountant.from_state_dict(aux["accountant"])
         self.scheduler.load_state_dict(aux["scheduler"])
         self.sampler.load_state_dict(aux["sampler"])
+        if "probe_rng" in aux:
+            self._probe_rng.set_state(aux["probe_rng"])
+        self.history = [EpochStats(**d) for d in aux.get("history", [])]
         self.step = aux["step"]
+        if aux.get("mid_epoch"):
+            # preemption save: re-enter the interrupted epoch, skipping
+            # analysis/selection and the already-run steps (train_epoch)
+            self._mid_epoch = {"epoch": aux["epoch"],
+                               "epoch_step": aux["epoch_step"],
+                               "epoch_losses": list(aux["epoch_losses"])}
+            self._next_epoch = aux["epoch"]
+        else:
+            self._mid_epoch = None
+            self._next_epoch = aux["epoch"] + 1
         return aux["epoch"]

@@ -1,4 +1,5 @@
-"""Checkpoint: roundtrip, CRC, retention, accountant/scheduler aux."""
+"""Checkpoint: roundtrip, CRC, retention, torn writes, accountant aux."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -18,10 +19,6 @@ def test_roundtrip(tmp_path):
     tree = make_tree()
     serialization.save(tmp_path / "c.ckpt", tree, {"step": 7})
     restored, aux = serialization.restore(tmp_path / "c.ckpt", tree)
-    for a, b in zip(jnp.tree_util.tree_leaves(restored) if hasattr(jnp, 'tree_util') else [],
-                    []):
-        pass
-    import jax
     for a, b in zip(jax.tree_util.tree_leaves(restored),
                     jax.tree_util.tree_leaves(tree)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -76,6 +73,50 @@ def test_accountant_in_aux_roundtrip(tmp_path):
     acc2 = RDPAccountant.from_state_dict(aux["accountant"])
     assert acc2.get_epsilon(1e-5) == acc.get_epsilon(1e-5)
     assert acc2.history[1].label == "analysis"
+
+
+def test_torn_write_never_shadows_previous_checkpoint(tmp_path):
+    """A writer killed mid-save leaves only a ``step_*.tmp`` staging dir
+    (the destination appears atomically via os.replace): it must not be
+    listed as a step, restore must fall back to the previous valid
+    checkpoint, and a restarted manager sweeps the orphan."""
+    m = CheckpointManager(tmp_path, async_write=False)
+    tree = make_tree()
+    m.save(1, tree, {"epoch": 1})
+    torn = tmp_path / "step_0000000002.tmp"
+    torn.mkdir()
+    (torn / "arrays.npz").write_bytes(b"half-written garbage")
+    assert m.steps() == [1]
+    step, _, aux = m.restore_latest(tree)
+    assert step == 1 and aux["epoch"] == 1
+    # restart: a fresh manager on the same dir removes the staging orphan
+    CheckpointManager(tmp_path, async_write=False)
+    assert not torn.exists()
+    assert m.steps() == [1]
+
+
+def test_half_built_destination_is_ignored(tmp_path):
+    """A destination dir missing meta.json (torn pre-atomic-write layout)
+    is not a valid step and never masks older checkpoints."""
+    m = CheckpointManager(tmp_path, async_write=False)
+    tree = make_tree()
+    m.save(1, tree, {"epoch": 1})
+    bad = tmp_path / "step_0000000002.ckpt"
+    bad.mkdir()
+    (bad / "arrays.npz").write_bytes(b"junk")
+    assert m.steps() == [1]
+    step, _, _ = m.restore_latest(tree)
+    assert step == 1
+
+
+def test_failed_save_cleans_staging_dir(tmp_path):
+    """An exception mid-serialization removes the .tmp dir and never
+    creates the destination."""
+    path = tmp_path / "c.ckpt"
+    with pytest.raises(TypeError):
+        serialization.save(path, make_tree(), {"bad": object()})
+    assert not path.exists()
+    assert not path.with_suffix(".tmp").exists()
 
 
 def test_async_write(tmp_path):

@@ -1,0 +1,138 @@
+"""FaultPlan determinism/consumption + ServeMetrics failure-bucket tests."""
+import json
+
+import pytest
+
+from repro.runtime.faults import (DEFAULT_FREEZE_READS, FAULT_KINDS,
+                                  FaultEvent, FaultPlan)
+from repro.serve.metrics import ServeMetrics
+
+
+# --------------------------------------------------------------------- #
+# FaultPlan
+# --------------------------------------------------------------------- #
+def test_generate_is_seed_deterministic():
+    a = FaultPlan.generate(7, horizon=50, n_slots=4, n_replicas=3)
+    b = FaultPlan.generate(7, horizon=50, n_slots=4, n_replicas=3)
+    assert a.pending == b.pending
+    c = FaultPlan.generate(8, horizon=50, n_slots=4, n_replicas=3)
+    assert a.pending != c.pending
+    # default: one event per kind
+    assert sorted(e.kind for e in a.pending) == sorted(FAULT_KINDS)
+
+
+def test_take_consumes_at_or_before_counter():
+    plan = FaultPlan([FaultEvent(kind="decode_fail", at=3),
+                      FaultEvent(kind="decode_fail", at=10),
+                      FaultEvent(kind="slot_corrupt", at=3)])
+    assert plan.take("decode_fail", 2) == []
+    # <= semantics: a skipped counter value still fires the event
+    due = plan.take("decode_fail", 5)
+    assert [e.at for e in due] == [3]
+    # other kinds are untouched
+    assert plan.has_pending("slot_corrupt")
+    assert plan.has_pending("decode_fail")
+    assert plan.take("decode_fail", 10)[0].at == 10
+    assert not plan.has_pending("decode_fail")
+
+
+def test_log_records_fired_events_as_json():
+    plan = FaultPlan([FaultEvent(kind="clock_freeze", at=1, duration=4)],
+                     seed=9)
+    plan.take("clock_freeze", 2)
+    blob = json.loads(plan.log_json(extra={"run": "test"}))
+    assert blob["seed"] == 9
+    assert blob["run"] == "test"
+    assert blob["fired"][0]["kind"] == "clock_freeze"
+    assert blob["fired"][0]["fired_at"] == 2
+    assert blob["pending"] == []
+
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(kind="nope", at=1)
+    with pytest.raises(ValueError):
+        FaultEvent(kind="preempt", at=-1)
+    with pytest.raises(ValueError):
+        FaultPlan.generate(0, horizon=1)
+    with pytest.raises(ValueError):
+        FaultPlan.generate(0, horizon=10, kinds=("bogus",))
+
+
+def test_generate_freeze_duration_default():
+    plan = FaultPlan.generate(0, kinds=("clock_freeze",), horizon=10)
+    (ev,) = plan.pending
+    assert ev.duration == DEFAULT_FREEZE_READS
+
+
+# --------------------------------------------------------------------- #
+# ServeMetrics failure buckets (satellite: never crash on shed /
+# never-admitted requests)
+# --------------------------------------------------------------------- #
+def test_metrics_summary_survives_shed_and_queue_timeout():
+    m = ServeMetrics()
+    # rid 0 completes normally
+    m.on_submit(0, 4, 0.0)
+    m.on_admit(0, 1.0)
+    m.on_first_token(0, 1.5)
+    m.on_complete(0, 2.0, n_generated=3)
+    # rid 1 shed at submit; rid 2 expires in queue — neither was admitted
+    m.on_submit(1, 4, 0.5)
+    m.on_shed(1, 0.5)
+    m.on_submit(2, 4, 0.6)
+    m.on_queue_timeout(2, 9.0)
+    s = m.summary()           # must not raise on the None-field rows
+    assert s["n_requests"] == 1
+    assert s["shed"] == 1
+    assert s["deadline_missed"] == 1
+    assert s["n_rejected"] == 2
+    rows = m.per_request()
+    assert [r["request_id"] for r in rows] == [0]
+    rej = m.rejected()
+    assert [(r["request_id"], r["status"]) for r in rej] == [
+        (1, "shed"), (2, "timed_out")]
+
+
+def test_metrics_timed_out_in_flight_counts_partial_tokens():
+    m = ServeMetrics()
+    m.on_submit(0, 4, 0.0)
+    m.on_admit(0, 1.0)
+    m.on_first_token(0, 1.5)
+    m.on_complete(0, 5.0, n_generated=2, status="timed_out")
+    s = m.summary()
+    assert s["n_requests"] == 0          # percentiles are ok-only
+    assert s["total_new_tokens"] == 2    # partial tokens still counted
+    assert s["deadline_missed"] == 1
+    assert s["n_timed_out"] == 1
+    (row,) = m.per_request()
+    assert row["status"] == "timed_out"
+    assert row["latency_s"] == 5.0
+
+
+def test_metrics_recovered_counts_ok_after_retry():
+    m = ServeMetrics()
+    m.on_submit(0, 4, 0.0)
+    m.on_admit(0, 1.0)
+    m.on_retry(0)
+    m.on_admit(0, 3.0)               # re-admission keeps the first stamp
+    m.on_first_token(0, 3.5)
+    m.on_complete(0, 4.0, n_generated=5)
+    assert m.timings[0].admitted == 1.0
+    assert m.retried == 1
+    assert m.recovered == 1
+    assert m.summary()["recovered"] == 1
+
+
+def test_metrics_rejects_unknown_status():
+    m = ServeMetrics()
+    m.on_submit(0, 4, 0.0)
+    with pytest.raises(ValueError):
+        m.on_complete(0, 1.0, n_generated=0, status="exploded")
+
+
+def test_metrics_empty_summary_has_counter_keys():
+    s = ServeMetrics().summary()
+    for key in ("shed", "retried", "deadline_missed", "recovered",
+                "faults_injected", "degraded_events", "n_rejected",
+                "tokens_per_sec"):
+        assert key in s

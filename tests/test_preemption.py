@@ -1,0 +1,167 @@
+"""Preemption-safe DP training: mid-epoch checkpoint + bit-identical resume.
+
+The acceptance bar: kill the trainer mid-epoch at a seeded step, restore
+in a fresh trainer, finish the run — params, optimizer state, accountant
+epsilon, scheduler EMA state, and the RNG stream positions must all match
+the uninterrupted run exactly (fp32 tolerance under the ghost gradient
+engine, whose Gram einsums may fuse differently across program shapes).
+"""
+import dataclasses
+import os
+import signal
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.synthetic import ImageClassDataset
+from repro.runtime.faults import FaultEvent, FaultPlan
+from repro.runtime.preemption import Preempted, PreemptionHandler
+from repro.train_loop import Trainer
+
+from test_epoch_executor import assert_trees_equal, small_run
+
+
+def make_ds():
+    return ImageClassDataset(n=256, num_classes=8, image_size=16, noise=0.4)
+
+
+def preempt_handler(step):
+    return PreemptionHandler(
+        faults=FaultPlan([FaultEvent(kind="preempt", at=step)]))
+
+
+def run_uninterrupted(run, epochs=2):
+    tr = Trainer(run, make_ds(), mode="dpquant")
+    tr.train(epochs)
+    return tr
+
+
+def run_preempted_then_resumed(run, ckpt_dir, at_step, epochs=2):
+    """Train until the injected preemption, then resume in a new trainer."""
+    tr1 = Trainer(run, make_ds(), mode="dpquant", checkpoint_dir=ckpt_dir,
+                  preemption=preempt_handler(at_step))
+    with pytest.raises(Preempted) as exc:
+        tr1.train(epochs)
+    assert exc.value.step == at_step
+    # fresh trainer == fresh process: nothing carries over but the files
+    tr2 = Trainer(run, make_ds(), mode="dpquant", checkpoint_dir=ckpt_dir)
+    resumed = tr2.restore_latest()
+    assert resumed is not None
+    assert tr2._mid_epoch is not None          # the save was mid-epoch
+    assert tr2.step == at_step
+    tr2.train(epochs - tr2._next_epoch)
+    return tr2
+
+
+def assert_same_end_state(a: Trainer, b: Trainer, exact=True):
+    assert a.step == b.step
+    if exact:
+        assert_trees_equal(a.params, b.params)
+        assert_trees_equal(a.opt_state, b.opt_state)
+    else:
+        for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                        jax.tree_util.tree_leaves(b.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-5, atol=1e-6)
+    # privacy accounting is exact either way: the executors charge at
+    # step/chunk boundaries and identical SGM events merge
+    assert (a.accountant.get_epsilon(1e-5) == b.accountant.get_epsilon(1e-5))
+    assert (a.accountant.total_steps("train")
+            == b.accountant.total_steps("train"))
+    assert len(a.accountant.history) == len(b.accountant.history)
+    # per-epoch stats (incl. the interrupted epoch's mean loss)
+    assert [h.epoch for h in a.history] == [h.epoch for h in b.history]
+    if exact:
+        np.testing.assert_array_equal([h.loss for h in a.history],
+                                      [h.loss for h in b.history])
+    # scheduler EMA / policy / analysis-RNG state
+    assert_trees_equal(a.scheduler.state_dict(), b.scheduler.state_dict())
+    # both RNG streams sit at the same position
+    np.testing.assert_array_equal(a.sampler.sample(), b.sampler.sample())
+    np.testing.assert_array_equal(a._probe_rng.randint(0, 1 << 30, 8),
+                                  b._probe_rng.randint(0, 1 << 30, 8))
+
+
+# --------------------------------------------------------------------------- #
+# mid-epoch preempt + resume == uninterrupted, both executors
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_preempt_resume_bitwise_loop_executor(tmp_path):
+    run = small_run("loop", steps_per_epoch=4)
+    ref = run_uninterrupted(run)
+    res = run_preempted_then_resumed(run, tmp_path, at_step=6)
+    assert_same_end_state(ref, res)
+
+
+@pytest.mark.slow
+def test_preempt_resume_bitwise_scan_executor(tmp_path):
+    """The scan executor checkpoints at chunk boundaries; resuming re-runs
+    only the remaining chunks of the interrupted epoch.  Preempting at
+    step 10 lands mid-epoch-2 — an *analysis* epoch (interval 2), so the
+    resume must not re-run analysis/selection (that would double-consume
+    the probe and scheduler RNG streams and double-charge the budget)."""
+    run = small_run("scan", chunk=2, steps_per_epoch=4)
+    ref = run_uninterrupted(run, epochs=3)
+    res = run_preempted_then_resumed(run, tmp_path, at_step=10, epochs=3)
+    assert_same_end_state(ref, res)
+
+
+@pytest.mark.slow
+def test_preempt_resume_ghost_engine(tmp_path):
+    """Same invariant under the ghost-norm gradient engine (fp32
+    tolerance; epsilon and RNG positions stay exact)."""
+    base = small_run("loop", steps_per_epoch=4)
+    run = dataclasses.replace(
+        base, dp=dataclasses.replace(base.dp, grad_mode="ghost"))
+    ref = run_uninterrupted(run)
+    res = run_preempted_then_resumed(run, tmp_path, at_step=6)
+    assert_same_end_state(ref, res, exact=False)
+
+
+@pytest.mark.slow
+def test_mid_epoch_checkpoint_guards_epoch_mismatch(tmp_path):
+    run = small_run("loop", steps_per_epoch=4)
+    tr1 = Trainer(run, make_ds(), mode="dpquant", checkpoint_dir=tmp_path,
+                  preemption=preempt_handler(6))
+    with pytest.raises(Preempted):
+        tr1.train(2)
+    tr2 = Trainer(run, make_ds(), mode="dpquant", checkpoint_dir=tmp_path)
+    tr2.restore_latest()
+    # the mid-epoch record is for epoch 1; any other epoch must refuse
+    with pytest.raises(RuntimeError):
+        tr2.train_epoch(0)
+    # and the record survives the refusal, so the correct resume still runs
+    stats = tr2.train_epoch(1)
+    assert stats.epoch == 1
+
+
+# --------------------------------------------------------------------------- #
+# PreemptionHandler unit behavior
+# --------------------------------------------------------------------------- #
+def test_handler_fault_events_latch_and_clear():
+    h = preempt_handler(3)
+    assert not h.should_preempt(2)
+    assert h.should_preempt(5)       # <= semantics: skipped steps still fire
+    assert h.should_preempt(6)       # latched until cleared
+    h.clear()
+    assert not h.should_preempt(7)   # event already consumed
+
+
+def test_handler_request_flag():
+    h = PreemptionHandler()
+    assert not h.should_preempt(0)
+    h.request()
+    assert h.requested and h.should_preempt(1)
+
+
+def test_handler_signal_install_uninstall():
+    h = PreemptionHandler()
+    prev = signal.getsignal(signal.SIGUSR1)
+    h.install(signals=(signal.SIGUSR1,))
+    try:
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert h.requested
+    finally:
+        h.uninstall()
+    assert signal.getsignal(signal.SIGUSR1) is prev

@@ -23,10 +23,7 @@ def test_straggler_detection():
     det = StragglerDetector(alpha=0.5, k_sigma=2.0, patience=2)
     for step in range(6):
         for hid in range(8):
-            t = 1.0 if hid != 5 else 3.0     # host 5 is 3x slower
-        # record in a separate loop to keep the ewma independent
-        for hid in range(8):
-            det.record(hid, 1.0 if hid != 5 else 3.0)
+            det.record(hid, 1.0 if hid != 5 else 3.0)  # host 5 is 3x slower
         det.update_strikes()
     assert det.stragglers() == [5]
 
@@ -40,6 +37,30 @@ def test_straggler_no_false_positive():
     assert det.stragglers() == []
 
 
+def test_straggler_single_host_fleet():
+    """A one-host fleet has no fleet stats: never flags, never crashes."""
+    det = StragglerDetector(patience=1)
+    for t in (1.0, 50.0, 1.0, 100.0):
+        det.record(0, t)
+        det.update_strikes()
+    assert det.stragglers() == []
+    assert det.hosts[0].strikes == 0
+
+
+def test_failure_detector_skips_malformed_files(tmp_path):
+    """Garbage files matching the heartbeat glob must not be fatal."""
+    now = time.time()
+    Heartbeat(tmp_path, 3).beat(step=1, now=now)
+    # non-numeric host id, missing id, and unreadable JSON
+    (tmp_path / "host_banana.hb").write_text('{"step": 1, "t": 0}')
+    (tmp_path / "host_.hb").write_text('{"step": 1, "t": 0}')
+    (tmp_path / "host_7.hb").write_text("not json {{{")
+    det = FailureDetector(tmp_path, deadline_s=30.0)
+    snap = det.snapshot(now=now + 1)
+    assert sorted(snap) == [3]
+    assert det.alive_hosts(now=now + 1) == [3]
+
+
 def test_elastic_remesh_keeps_tp():
     plan = plan_remesh(n_chips=512, model_parallel=16,
                        per_replica_batch=8, dataset_size=1_000_000)
@@ -50,6 +71,24 @@ def test_elastic_remesh_keeps_tp():
                         per_replica_batch=8, dataset_size=1_000_000)
     assert plan2.shape == (28, 16)
     assert plan2.sample_rate < plan.sample_rate
+
+
+def test_elastic_remesh_honors_pods():
+    """Regression: pods used to be accepted but silently ignored."""
+    plan = plan_remesh(n_chips=512, model_parallel=16,
+                       per_replica_batch=8, dataset_size=1_000_000, pods=2)
+    assert plan.shape == (2, 16, 16)
+    assert plan.axis_names == ("pod", "data", "model")
+    assert plan.global_batch == 2 * 16 * 8
+    # one pod is the legacy 2D mesh
+    flat = plan_remesh(n_chips=512, model_parallel=16,
+                       per_replica_batch=8, dataset_size=1_000_000, pods=1)
+    assert flat.shape == (32, 16)
+    assert flat.axis_names == ("data", "model")
+    assert flat.global_batch == plan.global_batch
+    # too many pods for even one replica each -> None
+    assert plan_remesh(n_chips=31, model_parallel=16, per_replica_batch=8,
+                       dataset_size=1_000_000, pods=2) is None
 
 
 def test_elastic_degrade_sequence():

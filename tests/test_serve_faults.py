@@ -1,0 +1,270 @@
+"""Chaos tests: the continuous engine under seeded fault injection.
+
+The acceptance bar (docs/SERVING.md "Failure model & recovery"): under a
+seeded ``FaultPlan`` injecting several distinct fault kinds — prefill and
+decode dispatch failures, slot-cache poison, a frozen clock, a replica
+death — every non-shed request's tokens are bit-identical to a fault-free
+run, on both the fp32 and the int8 slot-pool KV cache.  Determinism rests
+on the ``(request_id, position)`` sampling-key schedule plus RNG-free KV
+quantization, so replayed requests re-derive exactly the tokens they
+would have produced.
+"""
+import pytest
+
+from repro.config import ServeConfig
+from repro.runtime.faults import FaultEvent, FaultPlan
+from repro.runtime.supervisor import (DegradeToOneshot, ServeSupervisor,
+                                      run_supervised)
+from repro.serve import ContinuousEngine
+
+from test_serve_engine import make_model, prompt_of
+
+SPECS = [(5, 8), (3, 6), (7, 8), (4, 7)]       # (prompt_len, gen)
+
+
+def submit_all(engine, specs=SPECS):
+    return [engine.submit(prompt_of(40 + i, pl), max_new_tokens=g)
+            for i, (pl, g) in enumerate(specs)]
+
+
+def fault_free_tokens(model, params, serve):
+    engine = ContinuousEngine(model, params, serve)
+    submit_all(engine)
+    out = engine.run()
+    return {rid: r.tokens.tolist() for rid, r in out.items()}
+
+
+def ticking_clock(dt=0.05):
+    """Deterministic injected clock: advances ``dt`` per read."""
+    t = {"v": 0.0}
+
+    def clock():
+        t["v"] += dt
+        return t["v"]
+
+    return clock
+
+
+# --------------------------------------------------------------------------- #
+# chaos equivalence: >= 3 fault kinds, tokens bit-identical to fault-free
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+@pytest.mark.parametrize("kv_fmt", ["none", "int8"])
+def test_chaos_run_is_token_identical_to_fault_free(kv_fmt):
+    """Five distinct injected faults (prefill fail, decode fail, slot
+    poison, frozen clock, replica death); every request must recover to
+    status "ok" with exactly the fault-free token stream, under sampled
+    (temperature > 0) decoding on both KV-cache formats."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=2, max_seq=16, temperature=1.0, seed=3,
+                        kv_fmt=kv_fmt, max_retries=5)
+    ref = fault_free_tokens(model, params, serve)
+
+    plan = FaultPlan([
+        FaultEvent(kind="prefill_fail", at=1),
+        FaultEvent(kind="decode_fail", at=2),
+        FaultEvent(kind="replica_death", at=3, target=1),
+        FaultEvent(kind="clock_freeze", at=4, duration=6),
+        FaultEvent(kind="slot_corrupt", at=5, target=1),
+    ], seed=11)
+    engine = ContinuousEngine(model, params, serve, faults=plan)
+    sup = ServeSupervisor(engine, n_replicas=3, faults=plan,
+                          slot_fault_threshold=10)
+    submit_all(engine)
+    out = run_supervised(engine)
+
+    assert plan.pending == []              # every planned fault fired
+    assert sorted(out) == sorted(ref)
+    for rid, toks in ref.items():
+        assert out[rid].status == "ok"
+        assert out[rid].tokens.tolist() == toks
+    s = engine.metrics.summary()
+    assert s["faults_injected"] == 5
+    assert s["retried"] >= 1
+    assert s["recovered"] >= 1
+    # the replica death triggered the re-plan rung of the degraded ladder
+    assert sup.dead == {1}
+    assert s["degraded_events"] >= 1
+    assert engine.slot_cap == 1            # max(1, 2 slots * 2/3 live)
+    assert sup.plans[-1] is not None and sup.plans[-1].shape == (2, 1)
+
+
+@pytest.mark.slow
+def test_oneshot_fallback_drains_token_identically():
+    """Repeated slot-pool faults cross the supervisor threshold; the
+    oneshot drain must finish the victims' streams bit-identically (it
+    replays the engine's own per-(request, position) key schedule)."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=2, max_seq=16, temperature=1.0, seed=7,
+                        max_retries=5)
+    ref = fault_free_tokens(model, params, serve)
+
+    plan = FaultPlan([FaultEvent(kind="slot_corrupt", at=1, target=0),
+                      FaultEvent(kind="slot_corrupt", at=2, target=1)],
+                     seed=5)
+    engine = ContinuousEngine(model, params, serve, faults=plan)
+    sup = ServeSupervisor(engine, faults=plan, slot_fault_threshold=2)
+    submit_all(engine)
+    out = run_supervised(engine)
+
+    assert sup.events[-1]["kind"] == "oneshot_fallback"
+    assert engine.metrics.degraded_events >= 1
+    assert sorted(out) == sorted(ref)
+    for rid, toks in ref.items():
+        assert out[rid].status == "ok"
+        assert out[rid].tokens.tolist() == toks
+
+
+def test_degrade_to_oneshot_propagates_from_run():
+    """Without run_supervised the degraded-mode abort reaches the caller."""
+    model, params = make_model()
+    plan = FaultPlan([FaultEvent(kind="slot_corrupt", at=0, target=0)])
+    engine = ContinuousEngine(
+        model, params, ServeConfig(max_slots=1, max_seq=12), faults=plan)
+    ServeSupervisor(engine, faults=plan, slot_fault_threshold=1)
+    engine.submit(prompt_of(1, 4), max_new_tokens=4)
+    with pytest.raises(DegradeToOneshot):
+        engine.run()
+
+
+# --------------------------------------------------------------------------- #
+# individual fault kinds
+# --------------------------------------------------------------------------- #
+def test_prefill_failure_replays_from_scratch():
+    """A prefill dispatch failure re-queues the request before it touches
+    a slot; the retry must produce the unfaulted token stream."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=1, max_seq=12, temperature=1.0, seed=2)
+    ref = fault_free_tokens(model, params, serve)[0]
+
+    plan = FaultPlan([FaultEvent(kind="prefill_fail", at=0)])
+    engine = ContinuousEngine(model, params, serve, faults=plan)
+    rid = engine.submit(prompt_of(40, SPECS[0][0]),
+                        max_new_tokens=SPECS[0][1])
+    out = engine.run()
+    assert out[rid].status == "ok"
+    assert out[rid].tokens.tolist() == ref
+    assert engine.metrics.retried == 1
+    assert engine.metrics.recovered == 1
+
+
+def test_retries_exhausted_fails_request():
+    """More injected failures than the retry budget -> status "failed"."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=1, max_seq=12, max_retries=1)
+    plan = FaultPlan([FaultEvent(kind="prefill_fail", at=0),
+                      FaultEvent(kind="prefill_fail", at=1)])
+    engine = ContinuousEngine(model, params, serve, faults=plan)
+    rid = engine.submit(prompt_of(1, 4), max_new_tokens=4)
+    out = engine.run()
+    assert out[rid].status == "failed"
+    assert out[rid].tokens.size == 0
+    s = engine.metrics.summary()
+    assert s["n_failed"] == 1 and s["n_requests"] == 0
+
+
+def test_clock_freeze_thaws_and_completes():
+    """A frozen clock must hold reads still for the window, then thaw;
+    generated tokens are clock-independent."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=1, max_seq=12)
+    ref = fault_free_tokens(model, params, serve)[0]
+    plan = FaultPlan([FaultEvent(kind="clock_freeze", at=0, duration=3)])
+    engine = ContinuousEngine(model, params, serve, faults=plan)
+    rid = engine.submit(prompt_of(40, SPECS[0][0]),
+                        max_new_tokens=SPECS[0][1])
+    out = engine.run(clock=ticking_clock())
+    assert out[rid].status == "ok"
+    assert out[rid].tokens.tolist() == ref
+    assert engine.metrics.faults_injected == 1
+    assert not plan.has_pending("clock_freeze")
+
+
+# --------------------------------------------------------------------------- #
+# deadlines and load shedding
+# --------------------------------------------------------------------------- #
+def test_in_flight_deadline_retires_with_partial_tokens():
+    model, params = make_model()
+    engine = ContinuousEngine(
+        model, params,
+        ServeConfig(max_slots=1, max_seq=64, deadline_s=1.0))
+    rid = engine.submit(prompt_of(1, 4), max_new_tokens=40)
+    out = engine.run(clock=ticking_clock(0.05))
+    assert out[rid].status == "timed_out"
+    assert 0 < out[rid].tokens.size < 40      # partial result survives
+    s = engine.metrics.summary()
+    assert s["deadline_missed"] == 1 and s["n_timed_out"] == 1
+    assert s["total_new_tokens"] == out[rid].tokens.size
+
+
+def test_queued_deadline_expires_unadmitted():
+    """A request whose deadline passes while it waits for a slot is
+    rejected without tokens and lands in the metrics' rejected bucket."""
+    model, params = make_model()
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_slots=1, max_seq=64))
+    r0 = engine.submit(prompt_of(1, 4), max_new_tokens=30)
+    r1 = engine.submit(prompt_of(2, 4), max_new_tokens=4, deadline_s=0.5)
+    out = engine.run(clock=ticking_clock(0.05))
+    assert out[r0].status == "ok" and out[r0].tokens.size == 30
+    assert out[r1].status == "timed_out" and out[r1].tokens.size == 0
+    s = engine.metrics.summary()
+    assert s["n_rejected"] == 1
+    assert [r["request_id"] for r in engine.metrics.rejected()] == [r1]
+
+
+def test_bounded_queue_sheds_overflow_at_submit():
+    model, params = make_model()
+    engine = ContinuousEngine(
+        model, params, ServeConfig(max_slots=1, max_seq=12, max_queue=1))
+    rids = [engine.submit(prompt_of(50 + i, 4), max_new_tokens=3)
+            for i in range(3)]
+    out = engine.run()
+    assert out[rids[0]].status == "ok"
+    assert [out[r].status for r in rids[1:]] == ["shed", "shed"]
+    assert all(out[r].tokens.size == 0 for r in rids[1:])
+    s = engine.metrics.summary()
+    assert s["shed"] == 2 and s["n_rejected"] == 2
+    assert s["n_requests"] == 1
+
+
+# --------------------------------------------------------------------------- #
+# supervisor: replica death via heartbeats, straggler eviction
+# --------------------------------------------------------------------------- #
+def test_replica_death_detected_through_heartbeat_files(tmp_path):
+    """A killed replica stops beating; the FailureDetector declares it
+    dead on the shared injected clock and the supervisor re-plans."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=2, max_seq=16)
+    plan = FaultPlan([FaultEvent(kind="replica_death", at=1, target=2)])
+    engine = ContinuousEngine(model, params, serve, faults=plan)
+    sup = ServeSupervisor(engine, n_replicas=3, hb_dir=tmp_path,
+                          hb_deadline_s=2.0, faults=plan)
+    submit_all(engine, SPECS[:2])
+    out = engine.run(clock=ticking_clock(0.5))
+    assert all(r.status == "ok" for r in out.values())
+    assert sup.dead == {2}
+    assert sup.live_replicas() == [0, 1]
+    assert [e["kind"] for e in sup.events] == ["replan"]
+    assert sup.plans[-1].shape == (2, 1)
+    assert engine.slot_cap == 1
+    assert engine.metrics.degraded_events == 1
+
+
+def test_straggler_replica_is_evicted():
+    """A replica_slow fault inflates one replica's tick EWMA; after
+    `patience` strikes the supervisor evicts it like a death."""
+    model, params = make_model()
+    serve = ServeConfig(max_slots=2, max_seq=16)
+    plan = FaultPlan([FaultEvent(kind="replica_slow", at=1, target=5,
+                                 factor=4.0)])
+    engine = ContinuousEngine(model, params, serve, faults=plan)
+    sup = ServeSupervisor(engine, n_replicas=16, faults=plan,
+                          straggler_patience=2)
+    submit_all(engine, SPECS[:2])
+    out = engine.run()
+    assert all(r.status == "ok" for r in out.values())
+    assert 5 in sup.dead
+    assert engine.metrics.degraded_events >= 1
+    assert sup.events[0]["kind"] == "replan"
+    assert 5 in sup.events[0]["lost"]
